@@ -1,0 +1,62 @@
+"""Fig. 6: C-MAC RMS error under uniform inputs (no sparsity) + energy.
+
+Paper: 0.435% rms, lowest among CIM prototypes [3-6,12-14]; 35.0 TOPS/W;
+ACIM power dominates.  We reproduce the protocol bit-true and compare the
+functional baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_us
+from repro.core import (DEFAULT_CONFIG, baselines, fabricate,
+                        hybrid_mac_bit_true, hybrid_mac_ideal)
+from repro.core.costmodel import energy_per_conversion_pj, tops_per_watt
+
+
+def _rms_pct(y8, exact, cfg):
+    err = np.asarray(y8 * cfg.dcim_lsb - exact, np.float64)
+    fs = 2 * 64 * cfg.dcim_lsb
+    return 100 * np.sqrt(np.mean((err / fs) ** 2))
+
+
+def run(seed: int = 0, n: int = 16384):
+    cfg = DEFAULT_CONFIG
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xq = jax.random.randint(ks[0], (n, cfg.acc_len), -127, 128).clip(-127, 127)
+    wq = jax.random.randint(ks[1], (n, cfg.acc_len), -127, 128).clip(-127, 127)
+    macro = fabricate(ks[2], cfg)
+
+    fn = jax.jit(lambda a, b, k: hybrid_mac_bit_true(a, b, macro, cfg,
+                                                     noise_key=k))
+    us = time_us(fn, xq, wq, ks[3], iters=3)
+    out = fn(xq, wq, ks[3])
+    emit("fig6.rms_this_work_pct", us,
+         f"{_rms_pct(out['y8'], out['exact'], cfg):.3f}% rms "
+         "(paper measured: 0.435%; mismatch+rounding 0.29% + dynamic "
+         "noise calibrated at 0.45 LSB)")
+
+    ideal = hybrid_mac_ideal(xq, wq, cfg)
+    emit("fig6.rms_quantization_floor_pct", 0.0,
+         f"{_rms_pct(ideal, out['exact'], cfg):.3f}% rms (ADC rounding only)")
+
+    cfg_a = baselines.all_analog_config(cfg)
+    macro_a = fabricate(ks[3], cfg_a)
+    out_a = hybrid_mac_bit_true(xq, wq, macro_a, cfg_a)
+    emit("fig6.rms_all_analog_pct", 0.0,
+         f"{_rms_pct(out_a['y8'], out_a['exact'], cfg_a):.3f}% rms "
+         "(conventional ACIM [4-5]: MSB mismatch dominates)")
+
+    emit("fig6.rms_all_digital_pct", 0.0,
+         "0.000% rms (exact [11]; costs area/power, see figS1)")
+
+    e = energy_per_conversion_pj(cfg)
+    emit("fig6.energy_breakdown_pj", 0.0,
+         f"array {e['array']:.3f} + adc {e['adc']:.3f} + dcim {e['dcim']:.3f}"
+         f" + drivers {e.get('drivers', 0):.3f} = {e['total']:.3f} pJ/conv "
+         "(ACIM-side dominates, as measured)")
+    emit("fig6.tops_per_watt", 0.0,
+         f"{tops_per_watt(cfg):.1f} TOPS/W derived (paper measured: 35.0)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Fig. S3: application demo -- DOA estimation on the C-CIM macro.
+
+MUSIC direction-of-arrival estimation for a ULA (the paper's [17-19]
+application family): the complex covariance (X @ X^H) and the
+noise-subspace spectrum projections (E_n^H @ a(theta)) run through the
+emulated complex-CIM macro; the eigendecomposition stays in the digital
+backend (Fig. S3's DBP).  Paper claim: < 4% RMSE vs the fp32 software
+implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_us
+from repro.core import DEFAULT_CONFIG
+from repro.core.complex_mac import complex_cim_matmul
+
+
+def _steering(n_sensors, thetas_deg):
+    d = 0.5  # half-wavelength spacing
+    k = jnp.arange(n_sensors)[:, None]
+    th = jnp.deg2rad(jnp.asarray(thetas_deg))[None, :]
+    return jnp.exp(2j * jnp.pi * d * k * jnp.sin(th)).astype(jnp.complex64)
+
+
+def _music_spectrum(X, n_src, grid, cim: bool, key):
+    n = X.shape[0]
+    if cim:
+        R = complex_cim_matmul(X, X.conj().T, DEFAULT_CONFIG, noise_key=key)
+    else:
+        R = X @ X.conj().T
+    R = R / X.shape[1]
+    w, v = jnp.linalg.eigh(R)             # digital backend (Fig. S3 DBP)
+    En = v[:, : n - n_src]                # noise subspace
+    A = _steering(n, grid)                # (n, G)
+    if cim:
+        proj = complex_cim_matmul(En.conj().T, A, DEFAULT_CONFIG,
+                                  noise_key=jax.random.fold_in(key, 1))
+    else:
+        proj = En.conj().T @ A
+    p = 1.0 / jnp.maximum(jnp.sum(jnp.abs(proj) ** 2, axis=0), 1e-9)
+    return p
+
+
+def _estimate(p, grid, n_src):
+    p = np.asarray(p)
+    idx = []
+    order = np.argsort(p)[::-1]
+    for i in order:
+        if all(abs(grid[i] - grid[j]) > 5 for j in idx):
+            idx.append(i)
+        if len(idx) == n_src:
+            break
+    return sorted(grid[i] for i in idx)
+
+
+def run(seed: int = 0, n_trials: int = 12):
+    n_sensors, n_snap, n_src = 8, 64, 2
+    grid = np.arange(-60.0, 60.5, 0.5)
+    rng = np.random.default_rng(seed)
+    errs_cim, errs_sw, spec_nmse = [], [], []
+    t_us = None
+    for t in range(n_trials):
+        true = np.sort(rng.uniform(-50, 50, n_src))
+        while np.diff(true).min() < 12:
+            true = np.sort(rng.uniform(-50, 50, n_src))
+        A = _steering(n_sensors, true)
+        S = (rng.standard_normal((n_src, n_snap)) +
+             1j * rng.standard_normal((n_src, n_snap))) / np.sqrt(2)
+        N = (rng.standard_normal((n_sensors, n_snap)) +
+             1j * rng.standard_normal((n_sensors, n_snap))) * 0.05
+        X = jnp.asarray(A @ S + N, jnp.complex64)
+        key = jax.random.PRNGKey(seed * 100 + t)
+        p_sw = _music_spectrum(X, n_src, grid, cim=False, key=key)
+        if t_us is None:
+            t_us = time_us(lambda: _music_spectrum(X, n_src, grid, True, key),
+                           iters=1, warmup=1)
+        p_cim = _music_spectrum(X, n_src, grid, cim=True, key=key)
+        est_sw = _estimate(p_sw, grid, n_src)
+        est_cim = _estimate(p_cim, grid, n_src)
+        errs_sw.append(np.sqrt(np.mean((np.array(est_sw) - true) ** 2)))
+        errs_cim.append(np.sqrt(np.mean((np.array(est_cim) - true) ** 2)))
+        # compare log-spectra: MUSIC peaks are 1/eps-scaled, so linear NMSE
+        # is dominated by meaningless peak-height ratios
+        ps = 10 * np.log10(np.asarray(p_sw) / np.asarray(p_sw).max())
+        pc = 10 * np.log10(np.asarray(p_cim) / np.asarray(p_cim).max())
+        spec_nmse.append(np.linalg.norm(pc - ps) / np.linalg.norm(ps))
+
+    fov = 120.0
+    rmse_pct = 100 * np.mean(errs_cim) / fov
+    emit("figS3.doa_rmse_cim_deg", t_us,
+         f"{np.mean(errs_cim):.2f} deg RMSE over {n_trials} trials "
+         f"({rmse_pct:.2f}% of FOV; paper: <4% vs software)")
+    emit("figS3.doa_rmse_software_deg", 0.0,
+         f"{np.mean(errs_sw):.2f} deg (fp32 MUSIC reference)")
+    emit("figS3.spectrum_nmse_pct", 0.0,
+         f"{100*np.mean(spec_nmse):.2f}% spectrum NMSE vs software")
+    assert rmse_pct < 4.0, "paper claim violated"
+
+
+if __name__ == "__main__":
+    run()

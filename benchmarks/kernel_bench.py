@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + host timing) and
+the fast-vs-bit-true emulation fidelity/speed trade (the TPU adaptation:
+2 matmuls instead of 49 bit-plane products -- see DESIGN.md §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_us
+from repro.core import DEFAULT_CONFIG, cim_matmul, fabricate
+from repro.kernels.ccim_matmul import ccim_matmul_ref
+from repro.kernels.int8_matmul import int8_matmul
+
+
+def run(seed: int = 0):
+    cfg = DEFAULT_CONFIG
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    M, K, N = 64, 512, 64
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    macro = fabricate(key, cfg)
+
+    f_bit = jax.jit(lambda a, b: cim_matmul(a, b, cfg, noise_key=key,
+                                            macro=macro, fidelity="bit_true"))
+    f_fast = jax.jit(lambda a, b: cim_matmul(a, b, cfg, noise_key=key,
+                                             fidelity="fast"))
+    us_bit = time_us(f_bit, x, w, iters=2, warmup=1)
+    us_fast = time_us(f_fast, x, w, iters=2, warmup=1)
+    y_bit, y_fast = f_bit(x, w), f_fast(x, w)
+    ref = x @ w
+    fs = float(jnp.abs(x).max() * jnp.abs(w).max() * K)
+    emit("kern.bit_true_emulation", us_bit,
+         f"max FS-rel err {float(jnp.abs(y_bit-ref).max())/fs:.4f}")
+    emit("kern.fast_emulation", us_fast,
+         f"max FS-rel err {float(jnp.abs(y_fast-ref).max())/fs:.4f}; "
+         f"{us_bit/us_fast:.1f}x faster than bit-true (2 vs 49 matmuls)")
+
+    qx = jax.random.randint(k1, (M, K), -127, 128).clip(-127, 127).astype(jnp.int8)
+    qw = jax.random.randint(k2, (K, N), -127, 128).clip(-127, 127).astype(jnp.int8)
+    f_ref = jax.jit(ccim_matmul_ref)
+    us_ref = time_us(f_ref, qx, qw, iters=3)
+    emit("kern.ccim_ref_oracle", us_ref, f"{M}x{K}x{N} int GEMM (jnp oracle)")
+    f_i8 = jax.jit(lambda a, b: int8_matmul(a, b, use_pallas=False))
+    us_i8 = time_us(f_i8, x, w, iters=3)
+    emit("kern.int8_w8a8", us_i8, "all-digital CIM baseline [11] numerics")
+
+
+if __name__ == "__main__":
+    run()

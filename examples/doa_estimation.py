@@ -1,0 +1,50 @@
+"""DOA estimation on the complex-CIM macro (paper Fig. S3 application).
+
+MUSIC over an 8-sensor ULA; the complex covariance and spectrum
+projections run through the emulated macro, the eigendecomposition stays
+in the digital backend.  Paper claim: < 4% RMSE vs fp32 software.
+
+  PYTHONPATH=src python examples/doa_estimation.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.figS3_doa import _estimate, _music_spectrum, _steering
+
+import jax
+import jax.numpy as jnp
+
+true_doa = [-24.0, 17.0]
+n_sensors, n_snap = 8, 64
+rng = np.random.default_rng(1)
+A = _steering(n_sensors, true_doa)
+S = (rng.standard_normal((2, n_snap)) + 1j * rng.standard_normal((2, n_snap)))
+N = (rng.standard_normal((n_sensors, n_snap)) +
+     1j * rng.standard_normal((n_sensors, n_snap))) * 0.05
+X = jnp.asarray(A @ S + N, jnp.complex64)
+
+grid = np.arange(-60.0, 60.5, 0.5)
+key = jax.random.PRNGKey(0)
+p_sw = _music_spectrum(X, 2, grid, cim=False, key=key)
+p_cim = _music_spectrum(X, 2, grid, cim=True, key=key)
+
+est_sw = _estimate(p_sw, grid, 2)
+est_cim = _estimate(p_cim, grid, 2)
+print(f"true DOA:          {true_doa}")
+print(f"software MUSIC:    {est_sw}")
+print(f"C-CIM MUSIC:       {est_cim}")
+err = np.sqrt(np.mean((np.array(est_cim) - np.array(true_doa)) ** 2))
+print(f"C-CIM RMSE: {err:.2f} deg  ({100*err/120:.2f}% of FOV; paper <4%)")
+
+# ascii spectrum
+p = np.asarray(p_cim)
+p = p / p.max()
+print("\nMUSIC spectrum (C-CIM):")
+for i in range(0, len(grid), 8):
+    bar = "#" * int(40 * p[i])
+    print(f"{grid[i]:+6.1f} deg |{bar}")

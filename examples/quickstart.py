@@ -1,0 +1,58 @@
+"""Quickstart: the hybrid D/A complex-CIM macro in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CCIMConfig, cim_matmul, complex_cim_matmul,
+                        contribution_table, fabricate, hybrid_mac_bit_true)
+from repro.core.costmodel import density_mb_per_mm2, figS1_comparison
+
+cfg = CCIMConfig()  # the 28nm prototype: 8b SMF, top-3 DCIM, 7b SAR, 48aF UC
+print(f"DCIM group: {cfg.dcim_products} -> "
+      f"{100*np.sort(contribution_table(cfg).ravel())[-3:].sum():.1f}% of "
+      "output contribution (paper: 'half')")
+print(f"Memory density: {density_mb_per_mm2():.2f} Mb/mm^2 (paper: 1.80)\n")
+
+# --- fabricate a die (frozen mismatch) and run one 16-element complex MAC --
+key = jax.random.PRNGKey(0)
+macro = fabricate(key, cfg)
+k1, k2, k3 = jax.random.split(key, 3)
+x = jax.random.randint(k1, (4, 16), -127, 128).clip(-127, 127)
+w = jax.random.randint(k2, (4, 16), -127, 128).clip(-127, 127)
+out = hybrid_mac_bit_true(x, w, macro, cfg, noise_key=k3)
+print("one conversion per row:  y8 =", np.asarray(out["y8"]))
+print("exact / 2^11          =", np.asarray(out["exact"]) // 2048)
+print("DCIM part (exact)     =", np.asarray(out["dcim"]),
+      " ADC code =", np.asarray(out["adc_code"]), "\n")
+
+# --- float GEMM through the macro (tiled into 16-element conversions) -----
+xf = jax.random.normal(k1, (8, 256))
+wf = jax.random.normal(k2, (256, 32))
+y = cim_matmul(xf, wf, cfg, noise_key=k3)
+rel = float(jnp.linalg.norm(y - xf @ wf) / jnp.linalg.norm(xf @ wf))
+print(f"cim_matmul  (8x256)@(256x32): rel err {rel:.4f}")
+
+# --- complex MAC: ONE co-located weight array serves all 4 sub-products ---
+xc = (jax.random.normal(k1, (8, 64)) + 1j * jax.random.normal(k2, (8, 64))
+      ).astype(jnp.complex64)
+wc = (jax.random.normal(k2, (64, 8)) - 0.5j * jax.random.normal(k3, (64, 8))
+      ).astype(jnp.complex64)
+yc = complex_cim_matmul(xc, wc, cfg, noise_key=k3)
+ref = xc @ wc
+print(f"complex_cim_matmul rel err "
+      f"{float(jnp.linalg.norm(yc-ref)/jnp.linalg.norm(ref)):.4f}")
+
+# --- why this beats duplicated-weight / sequential complex CIM ------------
+s = figS1_comparison(cfg)["savings"]
+print(f"\nvs prior approaches: area -{s['area_pct_vs_duplicated']:.0f}% "
+      f"(paper -35%), latency -{s['latency_pct_vs_sequential']:.0f}% "
+      f"(paper -54%), power -{s['power_pct_vs_duplicated']:.0f}% "
+      f"(paper -24%)")

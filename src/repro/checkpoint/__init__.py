@@ -1,0 +1,1 @@
+from .manager import latest_step, load_meta, restore, save  # noqa: F401

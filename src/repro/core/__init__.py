@@ -1,0 +1,27 @@
+# The paper's primary contribution: bit-true hybrid digital/analog
+# complex-CIM macro model + differentiable CIM execution mode + cost model.
+from .ccim import (  # noqa: F401
+    CCIMConfig,
+    DEFAULT_CONFIG,
+    MacroInstance,
+    bit_planes,
+    cim_matmul,
+    cim_matmul_int,
+    contribution_table,
+    fabricate,
+    hybrid_mac_bit_true,
+    hybrid_mac_fast,
+    hybrid_mac_ideal,
+    ideal_macro,
+    quantize_smf,
+    sar_adc,
+    smf_scale,
+    split_sign_mag,
+)
+from .complex_mac import (  # noqa: F401
+    complex_cim_matmul,
+    complex_cim_matmul_int,
+    complex_mac_reference,
+)
+from .qat import cim_linear, maybe_cim_linear  # noqa: F401
+from . import baselines, costmodel  # noqa: F401

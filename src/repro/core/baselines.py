@@ -1,0 +1,72 @@
+"""Functional accuracy baselines the paper compares against (Fig. 6).
+
+  * duplicated-weight C-CIM [3]  -- two independent macro instances (two
+    mismatch draws), weights quantized twice; 1.5x area.
+  * sequential C-CIM             -- same macro reused over 4 passes (fully
+    correlated mismatch), 2.2x latency.
+  * all-analog CIM [4-5]         -- every bit-product through the cap array
+    + a wider ADC; MSB caps carry the dominant mismatch -> worse RMS.
+  * all-digital CIM [11]         -- exact (only quantization of operands),
+    the accuracy ceiling; costed in costmodel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ccim
+from .ccim import CCIMConfig, DEFAULT_CONFIG, MacroInstance
+
+Array = jax.Array
+
+
+def all_digital_mac(x_q: Array, w_q: Array) -> Array:
+    """Exact integer MAC (all-digital CIM [11])."""
+    return jnp.sum(x_q.astype(jnp.int32) * w_q.astype(jnp.int32), axis=-1)
+
+
+def all_analog_config(cfg: CCIMConfig = DEFAULT_CONFIG) -> CCIMConfig:
+    """All bit-products in analog; ADC must cover the full product range.
+
+    Range of sum(|I||W|) = 16*127^2 < 2^18 -> with LSB 2^11 the ADC needs
+    8 bits; conventional designs [4-5] also burn input DACs (not modelled
+    for accuracy -- their variation is the paper's motivation)."""
+    return dataclasses.replace(cfg, n_dcim_products=0, adc_bits=8)
+
+
+def all_analog_mac(x_q, w_q, macro, cfg=None, noise_key=None):
+    cfg = all_analog_config(cfg or DEFAULT_CONFIG)
+    return ccim.hybrid_mac_bit_true(x_q, w_q, macro, cfg, noise_key)
+
+
+def duplicated_cmac(
+    x_re, x_im, w_re, w_im,
+    macro_a: MacroInstance, macro_b: MacroInstance,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Baseline (a): Re lane on die-copy A, Im lane on die-copy B."""
+    keys = jax.random.split(noise_key, 4) if noise_key is not None else (None,) * 4
+    ac = ccim.hybrid_mac_bit_true(x_re, w_re, macro_a, cfg, keys[0])["y8"]
+    bd = ccim.hybrid_mac_bit_true(x_im, w_im, macro_a, cfg, keys[1])["y8"]
+    ad = ccim.hybrid_mac_bit_true(x_re, w_im, macro_b, cfg, keys[2])["y8"]
+    bc = ccim.hybrid_mac_bit_true(x_im, w_re, macro_b, cfg, keys[3])["y8"]
+    return ac - bd, ad + bc
+
+
+def sequential_cmac(
+    x_re, x_im, w_re, w_im,
+    macro: MacroInstance,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Baseline (b): all four sub-MACs sequenced on ONE macro."""
+    keys = jax.random.split(noise_key, 4) if noise_key is not None else (None,) * 4
+    ac = ccim.hybrid_mac_bit_true(x_re, w_re, macro, cfg, keys[0])["y8"]
+    bd = ccim.hybrid_mac_bit_true(x_im, w_im, macro, cfg, keys[1])["y8"]
+    ad = ccim.hybrid_mac_bit_true(x_re, w_im, macro, cfg, keys[2])["y8"]
+    bc = ccim.hybrid_mac_bit_true(x_im, w_re, macro, cfg, keys[3])["y8"]
+    return ac - bd, ad + bc

@@ -1,0 +1,471 @@
+"""Bit-true behavioural model of the hybrid digital/analog complex-CIM macro.
+
+Implements the arithmetic of the 28nm C-CIM prototype:
+
+  * 8-bit signed-magnitude (SMF) operands:  v = (-1)^s * m,  m in [0,127].
+  * Per ``acc_len``-element accumulate (one ADC conversion):
+      - DCIM: the top-3 bit-products (6,6),(6,5),(5,6) -- 50.8% of the total
+        contribution -- computed exactly with counting logic, range [-64,+64].
+      - ACIM: the remaining 46 bit-products summed in charge domain on a 2-D
+        binary-weighted capacitor array (unit cap 48 aF, 2.96% rms mismatch),
+        digitised by a 7-bit SAR ADC (CDAC LSB = 16 C).
+      - Post-digital adder: y8 = DCIM + ADC code, representing sum(I*W)/2^11.
+  * Complex MAC: four real sub-MACs sharing one co-located (Re,Im) weight
+    array; Re/Im outputs produced in parallel (see complex_mac.py).
+
+Everything is jax.jit compatible.  Analog non-idealities are explicit
+functions of a "fabricated" macro instance (frozen mismatch draws), so the
+same die gives the same static error pattern -- as in silicon.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CCIMConfig:
+    """Static configuration of the macro (defaults = the 28nm prototype)."""
+
+    n_mag_bits: int = 7                 # SMF magnitude bits (MSB of 8b is sign)
+    acc_len: int = 16                   # elements summed per ADC conversion
+    n_dcim_products: int = 3            # top-k bit-products routed to DCIM
+    adc_bits: int = 7                   # SAR ADC resolution
+    sigma_unit: float = 0.0296          # 48aF M7-M7 fringe cap mismatch (rms)
+    adc_lsb_units: int = 16             # CDAC LSB built from 16 unit caps
+    # 'per_unit': independent eps per (row, j, k) cell  (16 local 2D arrays)
+    # 'per_macro': one shared (j, k) eps  (fully correlated across rows)
+    mismatch_granularity: str = "per_unit"
+    # 'conservative': DNL = sigma_u * sqrt(2^N - 1)   (paper: 0.33 LSB rms)
+    # 'averaged':     per-bit sigma improves as 1/sqrt(#unit caps)
+    adc_mismatch_model: str = "conservative"
+    # dynamic noise (comparator input-referred + supply), in ADC LSB rms;
+    # 0.45 calibrates the model to the measured 0.435% rms C-MAC error
+    # (mismatch + rounding alone give 0.29%). Applied only when a noise_key
+    # is provided, so deterministic paths stay deterministic.
+    comparator_noise_lsb: float = 0.45
+    # VREF+/- polarity-path gain mismatch (the VREFCLK direction flip,
+    # Fig. 3) -- puts the max INL step at the zero crossing as measured.
+    sigma_vref_pol: float = 0.002
+    use_split_dac: bool = True          # split-DAC halves the cap count (area)
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def max_mag(self) -> int:
+        return (1 << self.n_mag_bits) - 1  # 127
+
+    @property
+    def dcim_products(self) -> Tuple[Tuple[int, int], ...]:
+        """The top-k (j, k) bit-product cells ordered by significance."""
+        cells = [(j, k) for j in range(self.n_mag_bits) for k in range(self.n_mag_bits)]
+        cells.sort(key=lambda jk: (-(jk[0] + jk[1]), -jk[0]))
+        return tuple(cells[: self.n_dcim_products])
+
+    @property
+    def dcim_lsb(self) -> int:
+        """Significance of the least weighted DCIM product (=2^11 for top-3).
+
+        With no DCIM products (all-analog baseline) the ADC LSB stays at
+        2^11 and the ADC must be wider instead (see baselines.py)."""
+        if not self.dcim_products:
+            return 1 << (2 * self.n_mag_bits - 3)
+        return 1 << min(j + k for j, k in self.dcim_products)
+
+    @property
+    def adc_half_range(self) -> int:
+        return 1 << (self.adc_bits - 1)  # 64 for 7b
+
+    @property
+    def fast_noise_correction(self) -> float:
+        """Variance correction for the fast path under split-DAC.
+
+        The fast path's matched variance assumes sigma_jk = sigma_u /
+        sqrt(2^(j+k)); the split-DAC floors the effective unit count at
+        2^ceil(s/2) (see fabricate).  For uniform bit statistics the
+        aggregate variance scales by sum(2^2s/eff) / sum(2^s) over the
+        ACIM cells -- a config-level scalar."""
+        if not self.use_split_dac:
+            return 1.0
+        num = den = 0.0
+        for j in range(self.n_mag_bits):
+            for k in range(self.n_mag_bits):
+                if (j, k) in self.dcim_products:
+                    continue
+                s = j + k
+                eff = min(2.0 ** s, 2.0 ** math.ceil(s / 2))
+                num += (2.0 ** (2 * s)) / eff
+                den += 2.0 ** s
+        return num / den
+
+    def dcim_weight_table(self) -> np.ndarray:
+        """(7,7) integer table: 2^(j+k)/dcim_lsb on DCIM cells, 0 elsewhere."""
+        t = np.zeros((self.n_mag_bits, self.n_mag_bits), np.int32)
+        for j, k in self.dcim_products:
+            t[j, k] = (1 << (j + k)) // self.dcim_lsb
+        return t
+
+    def acim_weight_table(self) -> np.ndarray:
+        """(7,7) integer table: 2^(j+k) on ACIM cells, 0 on DCIM cells."""
+        t = np.zeros((self.n_mag_bits, self.n_mag_bits), np.int64)
+        for j in range(self.n_mag_bits):
+            for k in range(self.n_mag_bits):
+                t[j, k] = 1 << (j + k)
+        for j, k in self.dcim_products:
+            t[j, k] = 0
+        return t
+
+    @property
+    def dcim_max(self) -> int:
+        """Max |DCIM| for a full accumulate: 16 * (2+1+1) = 64 (paper)."""
+        per_elem = sum((1 << (j + k)) // self.dcim_lsb for j, k in self.dcim_products)
+        return self.acc_len * per_elem
+
+
+DEFAULT_CONFIG = CCIMConfig()
+
+
+# ---------------------------------------------------------------------------
+# Fabrication: draw the static analog error pattern of one die
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MacroInstance:
+    """Frozen mismatch draws for one fabricated macro.
+
+    eps_array : relative cap error of each 2-D array cell.
+        shape (acc_len, 7, 7) for 'per_unit', (7, 7) for 'per_macro'.
+        Cell (j,k) holds 2^(j+k) unit caps => sigma = sigma_u / sqrt(2^(j+k)).
+    adc_cap_eps : relative error of each binary CDAC capacitor, shape (adc_bits,).
+    """
+
+    eps_array: Array
+    adc_cap_eps: Array
+    vref_pol_eps: Array  # scalar: +/- reference path gain asymmetry
+
+
+def fabricate(key: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> MacroInstance:
+    """Monte-Carlo 'tape-out': draw the static mismatch of one macro."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    nb = cfg.n_mag_bits
+    jk = jnp.arange(nb)
+    # sigma of a cap built from 2^(j+k) unit caps scales as 1/sqrt(count)
+    sig2d = cfg.sigma_unit / jnp.sqrt(
+        (2.0 ** jk)[:, None] * (2.0 ** jk)[None, :]
+    )  # (7,7)
+    if cfg.use_split_dac:
+        # Split-DAC: LSB section realised behind an attenuation cap, so the
+        # *effective* unit count of low-significance cells stops growing --
+        # their relative mismatch floors at sigma_unit (they are 1-2 physical
+        # caps each).  Model: sigma = sigma_u / sqrt(min(2^(j+k), 2^ceil((j+k)/2)))
+        eff = jnp.minimum(
+            (2.0 ** jk)[:, None] * (2.0 ** jk)[None, :],
+            2.0 ** jnp.ceil((jk[:, None] + jk[None, :]) / 2.0),
+        )
+        sig2d = cfg.sigma_unit / jnp.sqrt(eff)
+    shape = (cfg.acc_len, nb, nb) if cfg.mismatch_granularity == "per_unit" else (nb, nb)
+    eps_array = jax.random.normal(k1, shape) * sig2d  # broadcast over rows
+
+    if cfg.adc_mismatch_model == "conservative":
+        # paper's sizing rule: DNL = sigma_u*sqrt(2^N-1) = 0.33 LSB rms
+        sig_bit = cfg.sigma_unit / jnp.sqrt(2.0 ** jnp.arange(cfg.adc_bits))
+    else:
+        n_units = cfg.adc_lsb_units * (2.0 ** jnp.arange(cfg.adc_bits))
+        sig_bit = cfg.sigma_unit / jnp.sqrt(n_units)
+    adc_cap_eps = jax.random.normal(k2, (cfg.adc_bits,)) * sig_bit
+    vref_pol_eps = jax.random.normal(k3, ()) * cfg.sigma_vref_pol
+    return MacroInstance(eps_array=eps_array, adc_cap_eps=adc_cap_eps,
+                         vref_pol_eps=vref_pol_eps)
+
+
+def ideal_macro(cfg: CCIMConfig = DEFAULT_CONFIG) -> MacroInstance:
+    shape = (
+        (cfg.acc_len, cfg.n_mag_bits, cfg.n_mag_bits)
+        if cfg.mismatch_granularity == "per_unit"
+        else (cfg.n_mag_bits, cfg.n_mag_bits)
+    )
+    return MacroInstance(
+        eps_array=jnp.zeros(shape), adc_cap_eps=jnp.zeros((cfg.adc_bits,)),
+        vref_pol_eps=jnp.zeros(()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SMF quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_smf(x: Array, scale: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> Array:
+    """float -> integer in [-127, 127] (signed-magnitude has no -128)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -cfg.max_mag, cfg.max_mag).astype(jnp.int32)
+
+
+def smf_scale(x: Array, axis=None, keepdims: bool = False,
+              cfg: CCIMConfig = DEFAULT_CONFIG) -> Array:
+    """Symmetric max-abs scale so that max |q| = 127."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, 1e-12) / cfg.max_mag
+
+
+def split_sign_mag(q: Array) -> Tuple[Array, Array]:
+    """SMF decomposition: sign in {-1,+1}, magnitude in [0,127]."""
+    return jnp.where(q < 0, -1, 1).astype(jnp.int32), jnp.abs(q).astype(jnp.int32)
+
+
+def bit_planes(mag: Array, n_bits: int) -> Array:
+    """(...,) int magnitudes -> (..., n_bits) {0,1} planes, LSB first."""
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    return ((mag[..., None] >> shifts) & 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 7-bit SAR ADC with CDAC mismatch (bipolar, samples mid-scale 0x40)
+# ---------------------------------------------------------------------------
+
+
+def sar_adc(
+    v_lsb: Array,
+    adc_cap_eps: Array,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+) -> Array:
+    """Convert ``v_lsb`` (analog value in ideal-LSB units, signed) to a code.
+
+    Successive approximation against *real* (mismatched) CDAC weights; the
+    returned code is the ideal-binary interpretation of the decided bits --
+    exactly how CDAC mismatch becomes DNL/INL in silicon.
+    """
+    half = cfg.adc_half_range
+    x = jnp.clip(v_lsb, -half, half - 1) + half + 0.5  # unipolar, mid-tread
+    real_w = (2.0 ** jnp.arange(cfg.adc_bits)) * (1.0 + adc_cap_eps)
+    acc = jnp.zeros_like(x)
+    code = jnp.zeros_like(x, dtype=jnp.int32)
+    keys = (
+        jax.random.split(noise_key, cfg.adc_bits) if noise_key is not None else None
+    )
+    for b in range(cfg.adc_bits - 1, -1, -1):
+        trial = acc + real_w[b]
+        cmp_in = x
+        if keys is not None and cfg.comparator_noise_lsb > 0:
+            cmp_in = x + cfg.comparator_noise_lsb * jax.random.normal(keys[b], x.shape)
+        bit = (cmp_in >= trial).astype(jnp.int32)
+        acc = acc + bit * real_w[b]
+        code = code + bit * (1 << b)
+    return code - half  # back to signed, in [-64, +63]
+
+
+# ---------------------------------------------------------------------------
+# Hybrid MAC -- bit-true path (the oracle; exact silicon arithmetic)
+# ---------------------------------------------------------------------------
+
+
+def _signed_bits(q: Array, cfg: CCIMConfig) -> Array:
+    """(..., L) ints -> (..., L, n_bits) sign-carrying bit planes."""
+    s, m = split_sign_mag(q)
+    return s[..., None] * bit_planes(m, cfg.n_mag_bits)
+
+
+def hybrid_mac_bit_true(
+    x_q: Array,
+    w_q: Array,
+    macro: MacroInstance,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+) -> dict:
+    """One macro conversion: MAC of ``x_q`` and ``w_q`` over the last axis.
+
+    x_q, w_q : int arrays in [-127,127], trailing axis = acc_len (broadcast
+               batch dims allowed).
+    Returns dict(y8, dcim, adc_code, a_real, exact) where ``exact`` is the
+    full-precision integer dot product and ``y8`` the macro's 8-bit output
+    (y8 * 2^11 approximates ``exact``).
+    """
+    xb = _signed_bits(x_q, cfg)  # (..., L, 7) in {-1,0,1}
+    wb = _signed_bits(w_q, cfg)
+    # signed bit-product tensor: (..., L, 7, 7); entry = sigma_i * Ij * Wk
+    bp = xb[..., :, :, None] * wb[..., :, None, :]
+
+    dcim_w = jnp.asarray(cfg.dcim_weight_table())          # (7,7) small ints
+    acim_w = jnp.asarray(cfg.acim_weight_table(), jnp.float32)
+    eps = macro.eps_array                                   # (L,7,7) or (7,7)
+    real_w = acim_w * (1.0 + eps)                           # broadcasts
+
+    dcim = jnp.sum(bp * dcim_w, axis=(-3, -2, -1))          # exact int
+    a_real = jnp.sum(bp.astype(jnp.float32) * real_w, axis=(-3, -2, -1))
+    a_ideal = jnp.sum(bp.astype(jnp.int32) * acim_w.astype(jnp.int32), axis=(-3, -2, -1))
+
+    # VREFCLK polarity-path asymmetry: +/- conversions see slightly
+    # different reference gains (max INL lands at the zero crossing)
+    a_real = a_real * (1.0 + macro.vref_pol_eps * jnp.sign(a_real))
+    adc_code = sar_adc(a_real / cfg.dcim_lsb, macro.adc_cap_eps, cfg, noise_key)
+    y8 = dcim + adc_code
+    exact = jnp.sum(x_q.astype(jnp.int32) * w_q.astype(jnp.int32), axis=-1)
+    return dict(y8=y8, dcim=dcim, adc_code=adc_code, a_real=a_real,
+                a_ideal=a_ideal, exact=exact)
+
+
+def hybrid_mac_ideal(x_q: Array, w_q: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> Array:
+    """Mismatch-free macro output (only ADC rounding/clipping remains)."""
+    xb = _signed_bits(x_q, cfg)
+    wb = _signed_bits(w_q, cfg)
+    bp = xb[..., :, :, None] * wb[..., :, None, :]
+    dcim = jnp.sum(bp * jnp.asarray(cfg.dcim_weight_table()), axis=(-3, -2, -1))
+    a = jnp.sum(bp.astype(jnp.int32) * jnp.asarray(cfg.acim_weight_table()),
+                axis=(-3, -2, -1))
+    half = cfg.adc_half_range
+    code = jnp.clip(jnp.floor(a / cfg.dcim_lsb + 0.5), -half, half - 1)
+    return dcim + code.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid MAC -- fast path (moment-matched; 0 bit-planes)
+# ---------------------------------------------------------------------------
+#
+# For i.i.d. per-(row, j, k) cap mismatch, the analog error
+#     A_real - A_ideal = sum_i sigma_i sum_jk B_ijk 2^(j+k) eps_ijk
+# has variance  sigma_u^2 * sum_i sum_jk B_ijk 2^(j+k)  (since
+# Var[2^(j+k) eps] = 2^(j+k) sigma_u^2), i.e. sigma_u^2 times the *unsigned*
+# ACIM magnitude sum -- computable from |x| * |w| alone.  The fast path
+# exploits this: exact integer arithmetic for DCIM + ideal-ACIM, plus one
+# Gaussian with the exactly matched variance.  2 multiplies per element
+# instead of 49 bit-products.  This is the TPU-deployable emulation; tests
+# verify its first two error moments against the bit-true oracle.
+
+
+def _dcim_terms(x_q: Array, w_q: Array, cfg: CCIMConfig) -> Tuple[Array, Array]:
+    """Per-element DCIM value and unsigned ACIM magnitude (no bit planes)."""
+    sx, mx = split_sign_mag(x_q)
+    sw, mw = split_sign_mag(w_q)
+    sig = sx * sw
+    d_elem = jnp.zeros_like(mx)
+    for j, k in cfg.dcim_products:
+        d_elem = d_elem + ((mx >> j) & 1) * ((mw >> k) & 1) * (
+            (1 << (j + k)) // cfg.dcim_lsb
+        )
+    prod = mx.astype(jnp.int32) * mw.astype(jnp.int32)
+    acim_mag = prod - d_elem.astype(jnp.int32) * cfg.dcim_lsb  # unsigned, >= 0
+    return sig * d_elem, sig.astype(jnp.int32) * acim_mag, acim_mag
+
+
+def hybrid_mac_fast(
+    x_q: Array,
+    w_q: Array,
+    noise_key: Optional[Array],
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> dict:
+    """Moment-matched macro model: exact ints + one matched Gaussian + ADC."""
+    d_elem, a_elem, a_mag = _dcim_terms(x_q, w_q, cfg)
+    dcim = jnp.sum(d_elem, axis=-1)
+    a_ideal = jnp.sum(a_elem, axis=-1)
+    var = (cfg.sigma_unit**2 * cfg.fast_noise_correction
+           * jnp.sum(a_mag, axis=-1).astype(jnp.float32))
+    var = var + (cfg.comparator_noise_lsb * cfg.dcim_lsb) ** 2  # dynamic noise
+    a_real = a_ideal.astype(jnp.float32)
+    if noise_key is not None:
+        a_real = a_real + jnp.sqrt(var) * jax.random.normal(noise_key, a_real.shape)
+    half = cfg.adc_half_range
+    code = jnp.clip(jnp.floor(a_real / cfg.dcim_lsb + 0.5), -half, half - 1).astype(
+        jnp.int32
+    )
+    y8 = dcim + code
+    exact = jnp.sum(x_q.astype(jnp.int32) * w_q.astype(jnp.int32), axis=-1)
+    return dict(y8=y8, dcim=dcim, adc_code=code, a_real=a_real, a_ideal=a_ideal,
+                exact=exact)
+
+
+# ---------------------------------------------------------------------------
+# Macro-tiled integer matmul (the GEMM engine built from conversions)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_chunks(k: int, acc_len: int) -> int:
+    return (k + acc_len - 1) // acc_len
+
+
+def cim_matmul_int(
+    x_q: Array,
+    w_q: Array,
+    macro: Optional[MacroInstance],
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    fidelity: str = "fast",
+) -> Array:
+    """Integer GEMM through the macro:  (M,K) @ (K,N) -> (M,N) int64.
+
+    K is tiled into acc_len-element chunks; each chunk is one ADC conversion
+    producing an 8-bit partial, accumulated digitally at weight 2^11 --
+    exactly how a compiler would tile a GEMM onto a bank of these macros.
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (K, K2)
+    C = _pad_to_chunks(K, cfg.acc_len)
+    pad = C * cfg.acc_len - K
+    xq = jnp.pad(x_q, ((0, 0), (0, pad)))
+    wq = jnp.pad(w_q, ((0, pad), (0, 0)))
+    xq = xq.reshape(M, C, cfg.acc_len)              # (M,C,L)
+    wq = wq.reshape(C, cfg.acc_len, N)              # (C,L,N)
+
+    if fidelity == "fast":
+        xc = xq[:, None, :, :]                      # (M,1,C,L)
+        wc = jnp.transpose(wq, (2, 0, 1))[None]     # (1,N,C,L)
+        out = hybrid_mac_fast(xc, wc, noise_key, cfg)
+    elif fidelity == "bit_true":
+        assert macro is not None
+        xc = xq[:, None, :, :]
+        wc = jnp.transpose(wq, (2, 0, 1))[None]
+        out = hybrid_mac_bit_true(xc, wc, macro, cfg, noise_key)
+    elif fidelity == "exact":
+        return jnp.einsum("mcl,cln->mn", xq.astype(jnp.int32), wq.astype(jnp.int32))
+    else:
+        raise ValueError(fidelity)
+    # digital accumulation of per-conversion partials, each worth 2^11
+    return jnp.sum(out["y8"].astype(jnp.int32), axis=-1) * cfg.dcim_lsb
+
+
+# ---------------------------------------------------------------------------
+# Float-in/float-out CIM linear (quantize -> macro GEMM -> dequantize)
+# ---------------------------------------------------------------------------
+
+
+def cim_matmul(
+    x: Array,
+    w: Array,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    macro: Optional[MacroInstance] = None,
+    fidelity: str = "fast",
+    per_channel: bool = True,
+) -> Array:
+    """float (M,K) @ (K,N) through the emulated macro, dequantized."""
+    sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)          # per row
+    sw = (
+        smf_scale(w, axis=0, keepdims=True, cfg=cfg)
+        if per_channel
+        else smf_scale(w, cfg=cfg)
+    )
+    xq = quantize_smf(x, sx, cfg)
+    wq = quantize_smf(w, sw, cfg)
+    y_int = cim_matmul_int(xq, wq, macro, cfg, noise_key, fidelity)
+    return y_int.astype(jnp.float32) * sx * jnp.reshape(sw, (1, -1))
+
+
+def contribution_table(cfg: CCIMConfig = DEFAULT_CONFIG) -> np.ndarray:
+    """Fig. 2 analysis: fractional contribution of each (j,k) bit product."""
+    nb = cfg.n_mag_bits
+    w = np.array([[2.0 ** (j + k) for k in range(nb)] for j in range(nb)])
+    return w / w.sum()

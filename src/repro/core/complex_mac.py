@@ -1,0 +1,82 @@
+"""Complex MAC on the hybrid macro: the paper's headline feature.
+
+The complex bit-cell co-locates Re and Im of each weight in the same 6T
+array, so one weight residency serves all four real sub-MACs of
+
+    (a + bi)(c + di) = (ac - bd) + (ad + bc)i
+
+and the Re / Im outputs are produced in parallel (one array pass).  The
+compared baselines (see baselines.py / costmodel.py):
+
+  (a) duplicated-weight C-CIM [3]: two weight copies, parallel, 1.5x area;
+  (b) sequential C-CIM: one copy, 2.2x latency, extra orchestration logic.
+
+Numerically all three produce the same *kind* of result (4 real hybrid
+MACs); they differ in cost and in error correlation (duplicated weights
+see two independent mismatch draws).  This module implements the
+*this-work* dataflow.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ccim
+from .ccim import CCIMConfig, DEFAULT_CONFIG, MacroInstance
+
+Array = jax.Array
+
+
+def complex_cim_matmul_int(
+    x_re: Array, x_im: Array,            # (M, K) ints in [-127,127]
+    w_re: Array, w_im: Array,            # (K, N) ints -- ONE co-located copy
+    macro: Optional[MacroInstance],
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    fidelity: str = "fast",
+):
+    """Integer complex GEMM; returns (y_re, y_im) int64 at scale 2^11."""
+    keys = (None,) * 4
+    if noise_key is not None:
+        keys = jax.random.split(noise_key, 4)
+    mm = lambda a, b, k: ccim.cim_matmul_int(a, b, macro, cfg, k, fidelity)
+    # four real sub-MACs sharing the same weight arrays (no duplication)
+    ac = mm(x_re, w_re, keys[0])
+    bd = mm(x_im, w_im, keys[1])
+    ad = mm(x_re, w_im, keys[2])
+    bc = mm(x_im, w_re, keys[3])
+    return ac - bd, ad + bc
+
+
+def complex_cim_matmul(
+    x: Array,                            # (M, K) complex
+    w: Array,                            # (K, N) complex
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    macro: Optional[MacroInstance] = None,
+    fidelity: str = "fast",
+) -> Array:
+    """Float complex (M,K) @ (K,N) through the macro, dequantized.
+
+    Re and Im of each operand share one scale (they share the array's
+    full-scale), as in the silicon where both live on the same bitlines.
+    """
+    xr, xi = jnp.real(x), jnp.imag(x)
+    wr, wi = jnp.real(w), jnp.imag(w)
+    sx = ccim.smf_scale(jnp.maximum(jnp.abs(xr), jnp.abs(xi)), axis=-1,
+                        keepdims=True, cfg=cfg)
+    sw = ccim.smf_scale(jnp.maximum(jnp.abs(wr), jnp.abs(wi)), axis=0,
+                        keepdims=True, cfg=cfg)
+    q = lambda v, s: ccim.quantize_smf(v, s, cfg)
+    yr, yi = complex_cim_matmul_int(
+        q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw), macro, cfg, noise_key, fidelity
+    )
+    scale = sx * jnp.reshape(sw, (1, -1))
+    return (yr * scale + 1j * (yi * scale)).astype(jnp.complex64)
+
+
+def complex_mac_reference(x: Array, w: Array) -> Array:
+    """fp32 software oracle (the paper's comparison target in Fig. S3)."""
+    return x @ w

@@ -1,0 +1,55 @@
+"""Differentiable CIM execution mode (straight-through estimator).
+
+``cim_linear`` is the drop-in replacement for ``x @ w`` used by the model
+zoo when a config enables CIM execution.  Forward runs the emulated macro
+(fast fidelity by default -- exact DCIM ints + moment-matched analog error
++ ADC quantization); backward is the straight-through estimator, so QAT
+and LoRA-style error-recovery finetuning both work.
+
+The noise key is threaded explicitly: deterministic under jit, different
+per call-site/step if the caller splits keys (as train loops do).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ccim import CCIMConfig, DEFAULT_CONFIG, cim_matmul
+
+Array = jax.Array
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def cim_linear(x: Array, w: Array, noise_key: Optional[Array],
+               cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast") -> Array:
+    """(..., K) @ (K, N) through the macro, STE gradients."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = cim_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), cfg,
+                   noise_key=noise_key, fidelity=fidelity)
+    return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def _fwd(x, w, noise_key, cfg, fidelity):
+    return cim_linear(x, w, noise_key, cfg, fidelity), (x, w)
+
+
+def _bwd(cfg, fidelity, res, g):
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
+    return gx, gw, None
+
+
+cim_linear.defvjp(_fwd, _bwd)
+
+
+def maybe_cim_linear(x: Array, w: Array, cim_cfg: Optional[CCIMConfig],
+                     noise_key: Optional[Array] = None) -> Array:
+    """Dense matmul unless a CIM config is provided (the model-zoo hook)."""
+    if cim_cfg is None:
+        return x @ w
+    return cim_linear(x, w, noise_key, cim_cfg, "fast")

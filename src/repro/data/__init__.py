@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, Prefetcher, batch_at  # noqa: F401

@@ -1,0 +1,13 @@
+from .sharding import (  # noqa: F401
+    FSDP_EXTRA,
+    TP_RULES,
+    dp_axes,
+    dp_size,
+    named,
+    param_specs,
+    spec_for,
+)
+from .compression import (  # noqa: F401
+    compressed_psum_mean,
+    make_compressed_grad_allreduce,
+)

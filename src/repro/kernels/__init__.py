@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the macro's compute hot-spots, each as
+# <name>/{kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle)}; validated in interpret mode on CPU.
+from . import ccim_matmul, int8_matmul  # noqa: F401

@@ -1,0 +1,3 @@
+from .kernel import ccim_matmul_pallas  # noqa: F401
+from .ops import ccim_matmul, ccim_matmul_int  # noqa: F401
+from .ref import ccim_matmul_ref  # noqa: F401

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: hybrid DCIM/ACIM quantized GEMM (the macro's numerics).
+
+TPU adaptation of the paper's dataflow (see DESIGN.md §2): the MXU plays the
+role of the bit-parallel array.  Per 16-element K-chunk ("one ADC
+conversion") we compute
+
+    exact_c = x_c . w_c                       (int8 x int8 -> int32, MXU)
+    dcim_c  = 2*x6.w6 + x6.w5 + x5.w6         (3 signed MSB bit-plane dots)
+    acim_c  = exact_c - 2^11 * dcim_c         (the analog group's ideal sum)
+    code_c  = clip(floor(acim_c/2^11 + 1/2), -64, 63)     (7b SAR ADC)
+    y8_c    = dcim_c + code_c                 (post-digital adder)
+    out    += 2^11 * sum_c y8_c               (digital partial accumulation)
+
+i.e. the *ideal-analog* bit-true macro arithmetic (mismatch noise is a
+training-time emulation feature injected at the jnp level, see core.qat;
+the silicon itself has frozen mismatch -- the kernel models the design
+arithmetic).  All chunk dots are expressed as one batched dot_general so
+the MXU sees (C, bm, 16) x (C, 16, bn).
+
+Block shapes are MXU/VMEM aligned: bm, bn multiples of 128 (lane dim), bk a
+multiple of acc_len; VMEM working set = bm*bk + bk*bn (int8) + bm*bn
+(int32 scratch) -- 128x512x128 => 128 KiB + 64 KiB well under 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACC_LEN = 16
+DCIM_LSB = 2048  # 2^11
+ADC_HALF = 64    # 7-bit bipolar
+
+
+def _chunk_dot(x, w):
+    """(C, bm, L) x (C, L, bn) -> (C, bm, bn) int32 batched MXU dot."""
+    return jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _ccim_kernel(x_ref, w_ref, o_ref, acc_ref, *, bk: int, n_k: int):
+    """One (bm, bn) output tile; grid axis 2 walks K in bk steps."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)            # (bm, bk)
+    w = w_ref[...].astype(jnp.int32)            # (bk, bn)
+    bm, bn = x.shape[0], w.shape[1]
+    c = bk // ACC_LEN
+
+    # sign / magnitude decomposition (SMF)
+    sx = jnp.where(x < 0, -1, 1)
+    mx = jnp.abs(x)
+    sw = jnp.where(w < 0, -1, 1)
+    mw = jnp.abs(w)
+
+    # signed MSB bit-planes (values in {-1, 0, +1})
+    x6 = sx * ((mx >> 6) & 1)
+    x5 = sx * ((mx >> 5) & 1)
+    w6 = sw * ((mw >> 6) & 1)
+    w5 = sw * ((mw >> 5) & 1)
+
+    xc = x.reshape(bm, c, ACC_LEN).swapaxes(0, 1)       # (C, bm, L)
+    wc = w.reshape(c, ACC_LEN, bn)                      # (C, L, bn)
+    exact = _chunk_dot(xc, wc)
+
+    x6c = x6.reshape(bm, c, ACC_LEN).swapaxes(0, 1)
+    x5c = x5.reshape(bm, c, ACC_LEN).swapaxes(0, 1)
+    w6c = w6.reshape(c, ACC_LEN, bn)
+    w5c = w5.reshape(c, ACC_LEN, bn)
+    dcim = 2 * _chunk_dot(x6c, w6c) + _chunk_dot(x6c, w5c) + _chunk_dot(x5c, w6c)
+
+    acim = exact - dcim * DCIM_LSB
+    code = jnp.clip(
+        jnp.floor_divide(acim + DCIM_LSB // 2, DCIM_LSB), -ADC_HALF, ADC_HALF - 1
+    )
+    y8 = dcim + code
+    acc_ref[...] += jnp.sum(y8, axis=0) * DCIM_LSB
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def ccim_matmul_pallas(
+    x_q: jax.Array,           # (M, K) int8, values in [-127, 127]
+    w_q: jax.Array,           # (K, N) int8
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Hybrid-CIM integer GEMM -> (M, N) int32 at product scale (already x2^11)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk % ACC_LEN == 0
+    n_k = K // bk
+
+    kernel = functools.partial(_ccim_kernel, bk=bk, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q)

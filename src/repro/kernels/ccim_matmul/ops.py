@@ -1,0 +1,71 @@
+"""Jitted public wrapper for the hybrid-CIM GEMM kernel.
+
+Handles: float->SMF quantization, K padding to the accumulate length,
+(bm,bn,bk) block selection, CPU fallback (interpret mode), and dequant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ACC_LEN, DCIM_LSB, ccim_matmul_pallas
+from .ref import ccim_matmul_ref
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def ccim_matmul_int(
+    x_q: jax.Array, w_q: jax.Array, *, use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M,K) x (K,N) int8-range ints -> int32 macro GEMM (scale 2^11)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    M, K = x_q.shape
+    _, N = w_q.shape
+    Kp = _pad_to(K, ACC_LEN)
+    if Kp != K:
+        x_q = jnp.pad(x_q, ((0, 0), (0, Kp - K)))
+        w_q = jnp.pad(w_q, ((0, Kp - K), (0, 0)))
+    if not use_pallas:
+        return ccim_matmul_ref(x_q, w_q)
+    bm, bn = _pick_block(M, 128), _pick_block(N, 128)
+    bk = _pick_block(Kp // ACC_LEN, 32) * ACC_LEN
+    Mp, Np = _pad_to(M, bm), _pad_to(N, bn)
+    if (Mp, Np) != (M, N):
+        x_q = jnp.pad(x_q, ((0, Mp - M), (0, 0)))
+        w_q = jnp.pad(w_q, ((0, 0), (0, Np - N)))
+    y = ccim_matmul_pallas(
+        x_q.astype(jnp.int8), w_q.astype(jnp.int8),
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ccim_matmul(
+    x: jax.Array, w: jax.Array, *, use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """float GEMM through the (ideal-analog) macro numerics, dequantized."""
+    amax_x = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+    amax_w = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-12)
+    sx, sw = amax_x / 127.0, amax_w / 127.0
+    xq = jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int32)
+    wq = jnp.clip(jnp.round(w / sw), -127, 127).astype(jnp.int32)
+    y = ccim_matmul_int(xq, wq, use_pallas=use_pallas, interpret=interpret)
+    return y.astype(jnp.float32) * sx * sw

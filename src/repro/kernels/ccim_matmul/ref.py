@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the hybrid-CIM GEMM kernel (ideal-analog arithmetic).
+
+Must match core.ccim.hybrid_mac_ideal tiled over K -- and it does, by
+construction: both compute y8 = dcim + clip(floor(acim/2^11 + 1/2)) per
+16-element chunk.  Kept dependency-free of the kernel module so the test
+compares two independent implementations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ACC_LEN = 16
+DCIM_LSB = 2048
+ADC_HALF = 64
+
+
+def ccim_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) int @ (K, N) int -> (M, N) int32 at product scale."""
+    M, K = x_q.shape
+    _, N = w_q.shape
+    assert K % ACC_LEN == 0
+    C = K // ACC_LEN
+    x = x_q.astype(jnp.int32).reshape(M, C, ACC_LEN)
+    w = w_q.astype(jnp.int32).reshape(C, ACC_LEN, N)
+
+    sx, mx = jnp.where(x < 0, -1, 1), jnp.abs(x)
+    sw, mw = jnp.where(w < 0, -1, 1), jnp.abs(w)
+    x6, x5 = sx * ((mx >> 6) & 1), sx * ((mx >> 5) & 1)
+    w6, w5 = sw * ((mw >> 6) & 1), sw * ((mw >> 5) & 1)
+
+    exact = jnp.einsum("mcl,cln->mcn", x, w)
+    dcim = (
+        2 * jnp.einsum("mcl,cln->mcn", x6, w6)
+        + jnp.einsum("mcl,cln->mcn", x6, w5)
+        + jnp.einsum("mcl,cln->mcn", x5, w6)
+    )
+    acim = exact - dcim * DCIM_LSB
+    code = jnp.clip(
+        jnp.floor_divide(acim + DCIM_LSB // 2, DCIM_LSB), -ADC_HALF, ADC_HALF - 1
+    )
+    y8 = dcim + code
+    return jnp.sum(y8, axis=1) * DCIM_LSB

@@ -1,0 +1,3 @@
+from .kernel import int8_matmul_pallas  # noqa: F401
+from .ops import int8_matmul  # noqa: F401
+from .ref import int8_matmul_ref  # noqa: F401

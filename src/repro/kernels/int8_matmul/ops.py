@@ -1,0 +1,48 @@
+"""Jitted wrapper: dynamic quantization + the W8A8 Pallas GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import int8_matmul_pallas
+from .ref import int8_matmul_ref
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def int8_matmul(
+    x: jax.Array, w: jax.Array, *, use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """float (M,K)@(K,N) with dynamic per-row/per-col int8 quantization."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    sx = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12) / 127.0
+    sw = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-12) / 127.0
+    xq = jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / sw), -127, 127).astype(jnp.int8)
+    if not use_pallas:
+        return int8_matmul_ref(xq, wq, sx, sw)
+    M, K = xq.shape
+    _, N = wq.shape
+    bm, bn = _pick_block(M, 128), _pick_block(N, 128)
+    bk = _pick_block(K, 512)
+    return int8_matmul_pallas(
+        xq, wq, sx.astype(jnp.float32), sw.astype(jnp.float32),
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the W8A8 GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q, w_q, sx, sw):
+    acc = jnp.einsum(
+        "mk,kn->mn", x_q.astype(jnp.int32), w_q.astype(jnp.int32)
+    )
+    return acc.astype(jnp.float32) * sx * sw

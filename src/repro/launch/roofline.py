@@ -1,0 +1,120 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e targets).
+
+Terms per (arch x shape x mesh) cell, all PER-DEVICE seconds (the dry-run
+records trip-count-aware, SPMD-partitioned per-device numbers -- see
+hlo_analysis.py):
+
+  compute    = dot_FLOPs_dev / 197e12 FLOP/s
+  memory     = traffic_bytes_dev / 819e9 B/s
+  collective = collective_bytes_dev / 50e9 B/s (per ICI link)
+
+plus MODEL_FLOPS (6*N_active*D train, 2*N_active*D inference) and the
+useful-compute ratio MODEL_FLOPS / executed_FLOPs, which exposes remat
+recompute + emulation overheads.  roofline_frac = useful-per-device-FLOPs
+/ peak at the bottleneck-implied step time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "results", "dryrun")
+
+
+def model_flops(meta: dict, kind: str) -> float:
+    """6*N*D for training, 2*N_active*D for inference (D = tokens)."""
+    n_act = meta["active_params"]
+    if kind == "train":
+        return 6.0 * n_act * meta["seq"] * meta["batch"]
+    if kind == "prefill":
+        return 2.0 * n_act * meta["seq"] * meta["batch"]
+    return 2.0 * n_act * meta["batch"]   # decode: one token per sequence
+
+
+def analyse(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    meta = rec["meta"]
+    mf = model_flops(meta, meta["kind"])
+    flops_dev = rec["flops"] or 0.0          # per-device, trip-aware
+    bytes_dev = rec["hlo_bytes"] or 0.0
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bound = max(terms, key=terms.get)
+    t_total = max(terms.values())
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    mfu = (mf / chips / PEAK_FLOPS) / t_total if t_total else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=meta["kind"],
+        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+        bound=bound,
+        model_flops=mf,
+        useful_ratio=useful,
+        roofline_frac=mfu,
+        memory_gb_per_dev=_mem_gb(rec),
+    )
+
+
+def _mem_gb(rec) -> Optional[float]:
+    m = rec.get("memory") or {}
+    vals = [v for k, v in m.items()
+            if v and k in ("argument_bytes", "temp_bytes")]
+    return round(sum(vals) / 2**30, 2) if vals else None
+
+
+def load_all(result_dir: str = RESULT_DIR):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def table(result_dir: str = RESULT_DIR, mesh: str = "16x16") -> str:
+    rows = []
+    hdr = (f"{'arch':17s} {'shape':12s} {'bound':10s} {'compute_s':>10s} "
+           f"{'memory_s':>9s} {'coll_s':>9s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'GB/dev':>7s}")
+    rows.append(hdr)
+    recs = load_all(result_dir)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    for rec in recs:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append(f"{rec['arch']:17s} {rec['shape']:12s} SKIP "
+                        "(full attention; sub-quadratic-only shape)")
+            continue
+        a = analyse(rec)
+        if a is None:
+            rows.append(f"{rec['arch']:17s} {rec['shape']:12s} FAILED")
+            continue
+        rows.append(
+            f"{a['arch']:17s} {a['shape']:12s} {a['bound']:10s} "
+            f"{a['compute_s']:10.4f} {a['memory_s']:9.4f} "
+            f"{a['collective_s']:9.4f} {a['useful_ratio']:7.2f} "
+            f"{100*a['roofline_frac']:7.1f} "
+            f"{a['memory_gb_per_dev'] or 0:7.1f}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(table(mesh=mesh))

@@ -1,0 +1,240 @@
+"""(architecture x input-shape) cells: ShapeDtypeStruct input specs, step
+functions, and sharding trees for the dry-run / train / serve launchers.
+
+The 4 assigned LM shapes:
+    train_4k      seq 4096,   global_batch 256   -> train_step
+    prefill_32k   seq 32768,  global_batch 32    -> prefill (serve)
+    decode_32k    seq 32768,  global_batch 128   -> serve_step (1 new token)
+    long_500k     seq 524288, global_batch 1     -> serve_step; SSM/hybrid only
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import sharding as shd
+from ..models import lm
+from ..models.config import ModelConfig
+from ..optim import OptConfig, adamw_update, init_opt_state
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+FSDP_PARAM_THRESHOLD = 50e9  # ZeRO-3 only where params+moments cannot fit
+# otherwise (<= ~15B): TP/16 + replicated-over-data moments stays < 16 GB/dev
+# and avoids the activation-sized FSDP all-reduces XLA CPU SPMD emits
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic context handling: SSM/hybrid only.
+
+    (All 10 archs are decoders, so decode shapes always apply.)"""
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, (
+            f"{cfg.name} is a full-attention decoder; 500k-token context "
+            "requires sub-quadratic attention (run for SSM/hybrid only). "
+            "Skip recorded per DESIGN.md §4.")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer shapes and shardings
+# ---------------------------------------------------------------------------
+
+
+def param_shapes_and_axes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree (no allocation) + logical-axes tree."""
+    shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    _, axes = lm.init(jax.random.PRNGKey(0), cfg.reduced())
+    assert (jax.tree.structure(shapes)
+            == jax.tree.structure(axes, is_leaf=lambda x: isinstance(x, tuple))), \
+        "axes tree drifted from params tree"
+    return shapes, axes
+
+
+def param_count(shapes) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig, shapes) -> int:
+    """MoE: only top_k routed experts (+everything else) are active/token."""
+    total = param_count(shapes)
+    if not cfg.n_experts:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+def use_fsdp(cfg: ModelConfig, shapes) -> bool:
+    return param_count(shapes) >= FSDP_PARAM_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+# per-kind input specs + shardings
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh):
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dp = shd.dp_axes(mesh)
+    rules = {"batch": dp}
+    out_shapes: Dict[str, Any] = {}
+    out_spec: Dict[str, Any] = {}
+    n_front = cfg.n_frontend_tokens if cfg.family in ("vlm",) else 0
+    if info["kind"] in ("train", "prefill"):
+        s_text = S - n_front
+        out_shapes["tokens"] = _sds((B, s_text), jnp.int32)
+        out_spec["tokens"] = shd.spec_for(
+            (B, s_text), ("batch", "seq"), mesh, overrides=rules)
+        if n_front:
+            out_shapes["frontend_embs"] = _sds((B, n_front, cfg.d_model),
+                                               jnp.bfloat16)
+            out_spec["frontend_embs"] = shd.spec_for(
+                (B, n_front, cfg.d_model), ("batch", "front", "embed"), mesh,
+                overrides=rules)
+    else:  # decode
+        out_shapes["token"] = _sds((B, 1), jnp.int32)
+        out_spec["token"] = shd.spec_for(
+            (B, 1), ("batch", "seq"), mesh, overrides=rules)
+    return out_shapes, out_spec
+
+
+# decode/prefill cache logical axes (shape-aware relocation gives split-KV
+# for few-kv-head archs and sequence-parallel caches for batch==1):
+_CACHE_AXES = {
+    "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+    "shared_k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+    "shared_v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+    "ssm": ("layers", "batch", "ssm_heads", "head_dim", "state"),
+    "conv_x": ("layers", "batch", "conv", "ssm_inner"),
+    "conv_bc": ("layers", "batch", "conv", "state2"),
+    "pos": (),
+}
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStructs + PartitionSpecs for the decode/prefill cache."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dp = shd.dp_axes(mesh)
+    rules = {"batch": dp, "kv_heads": "model", "ssm_heads": "model",
+             "ssm_inner": "model"}
+    shapes = jax.eval_shape(partial(lm.init_cache, cfg, B, S, dtype))
+    spec = {
+        k: (P() if k == "pos" else shd.spec_for(
+            shapes[k].shape, _CACHE_AXES[k], mesh, overrides=rules))
+        for k in shapes
+    }
+    return shapes, spec
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, ocfg: Optional[OptConfig] = None):
+    ocfg = ocfg or OptConfig(
+        schedule=cfg.lr_schedule if cfg.lr_schedule in ("wsd", "cosine")
+        else "cosine",
+        moment_dtype="bfloat16" if cfg.n_experts >= 64 else "float32",
+    )
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return lm.lm_loss(p, cfg, batch["tokens"],
+                              batch.get("frontend_embs"))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, {"loss": loss}
+
+    return train_step, ocfg
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, cfg, batch["tokens"], cache,
+                          batch.get("frontend_embs"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, batch, cache):
+        return lm.decode_step(params, cfg, batch["token"], cache)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# the full lowering bundle for one (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellSpec:
+    fn: Any                     # jittable step
+    arg_shapes: tuple           # ShapeDtypeStruct trees
+    in_shardings: tuple         # NamedSharding trees
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               fsdp: Optional[bool] = None) -> CellSpec:
+    info = SHAPES[shape_name]
+    p_shapes, axes = param_shapes_and_axes(cfg)
+    fsdp = use_fsdp(cfg, p_shapes) if fsdp is None else fsdp
+    p_spec = shd.param_specs(p_shapes, axes, mesh, fsdp=fsdp)
+    p_shard = shd.named(mesh, p_spec)
+    b_shapes, b_spec = batch_specs(cfg, shape_name, mesh)
+    b_shard = shd.named(mesh, b_spec)
+    meta = dict(arch=cfg.name, shape=shape_name, kind=info["kind"],
+                fsdp=fsdp, params=param_count(p_shapes),
+                active_params=active_param_count(cfg, p_shapes),
+                seq=info["seq"], batch=info["batch"])
+
+    if info["kind"] == "train":
+        step, ocfg = make_train_step(cfg)
+        o_shapes = jax.eval_shape(partial(init_opt_state, cfg=ocfg), p_shapes)
+        o_spec = {"step": P(), "m": p_spec, "v": p_spec}
+        o_shard = shd.named(mesh, o_spec)
+        return CellSpec(
+            fn=step,
+            arg_shapes=(p_shapes, o_shapes, b_shapes),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+            meta=meta)
+
+    c_shapes, c_spec = cache_specs(cfg, shape_name, mesh)
+    c_shard = shd.named(mesh, c_spec)
+    if info["kind"] == "prefill":
+        step = make_prefill_step(cfg)
+    else:
+        step = make_decode_step(cfg)
+    return CellSpec(
+        fn=step,
+        arg_shapes=(p_shapes, b_shapes, c_shapes),
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,),
+        meta=meta)

@@ -1,0 +1,415 @@
+"""Decoder LM assembly for every architecture family.
+
+One functional model with four entry points:
+
+  init(key, cfg)                          -> (params, axes)
+  forward(params, cfg, tokens, ...)       -> logits, aux      (train path)
+  prefill(params, cfg, tokens, cache)     -> logits, cache    (inference)
+  decode_step(params, cfg, token, cache)  -> logits, cache    (inference)
+
+Layer stacks are scanned (stacked params, jax.lax.scan) so compile time is
+depth-independent -- required for 40-cell dry-runs on CPU and the right
+call for production.  Training bodies are rematerialized (jax.checkpoint)
+so the dry-run memory analysis reflects a deployable activation footprint.
+
+Families:
+  dense    : [attn, mlp] x L
+  moe      : [attn, moe] x L
+  ssm      : [mamba2] x L
+  hybrid   : groups of `period` mamba layers + ONE shared attn+mlp block
+             (zamba2 -- weight co-location showcase, see DESIGN.md)
+  vlm      : dense backbone + frontend patch-embedding stub, prefix-LM
+  audio    : dense backbone over codec-token frames (frontend stub)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stacked_init(init_fn, key, n: int):
+    """vmap a per-layer init over n layer keys -> stacked params + axes."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(jax.random.PRNGKey(0))  # axes from one instantiation
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+def _block_init(cfg: ModelConfig, dtype):
+    """Per-layer (attn/mixer + mlp/moe + norms) init for the scanned stack."""
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p, a = {}, {}
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            p["attn"], a["attn"] = L.attention_init(ks[0], cfg, dtype)
+            p["ln1"], a["ln1"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+            p["ln2"], a["ln2"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+            if cfg.family == "moe":
+                p["moe"], a["moe"] = L.moe_init(ks[1], cfg, dtype)
+                if cfg.d_ff:  # dense residual branch (arctic)
+                    p["mlp"], a["mlp"] = L.mlp_init(ks[2], cfg, cfg.d_ff, dtype)
+            else:
+                p["mlp"], a["mlp"] = L.mlp_init(ks[1], cfg, cfg.d_ff, dtype)
+        elif cfg.family in ("ssm", "hybrid"):
+            p["mamba"], a["mamba"] = L.mamba2_init(ks[0], cfg, dtype)
+            p["ln1"], a["ln1"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+        else:
+            raise ValueError(cfg.family)
+        return p, a
+
+    return init
+
+
+def _shared_block_init(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["attn"], a["attn"] = L.attention_init(ks[0], cfg, dtype)
+    p["mlp"], a["mlp"] = L.mlp_init(ks[1], cfg, cfg.d_ff, dtype)
+    p["ln1"], a["ln1"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+    p["ln2"], a["ln2"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+    return p, a
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"] = (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype)
+    a["embed"] = ("vocab", "head_embed")
+    blk_init = _block_init(cfg, dtype)
+    p["layers"], a["layers"] = _stacked_init(blk_init, k_layers, cfg.n_layers)
+    if cfg.family == "hybrid":
+        p["shared"], a["shared"] = _shared_block_init(cfg, k_shared, dtype)
+    p["ln_f"], a["ln_f"] = jnp.zeros((cfg.d_model,), dtype), ("embed",)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = L._init_dense(
+            k_head, cfg.d_model, cfg.vocab_size, ("head_embed", "vocab"), dtype=dtype)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# shared forward machinery
+# ---------------------------------------------------------------------------
+
+
+def _is_local_arr(cfg: ModelConfig) -> Array:
+    return jnp.asarray(
+        [cfg.layer_is_local(i) for i in range(cfg.n_layers)], jnp.bool_)
+
+
+def _embed(p, cfg: ModelConfig, tokens: Array,
+           frontend_embs: Optional[Array]) -> Tuple[Array, int]:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.family in ("vlm", "audio") and frontend_embs is not None:
+        x = jnp.concatenate([frontend_embs.astype(x.dtype), x], axis=1)
+    n_prefix = (frontend_embs.shape[1]
+                if (cfg.prefix_lm and frontend_embs is not None) else 0)
+    return x, n_prefix
+
+
+def _logits(p, cfg: ModelConfig, x: Array) -> Array:
+    x = L.rms_norm(x, p["ln_f"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _attn_block(blk, x, cfg, positions, is_local, kv=None, cache_pos=None,
+                n_prefix=0, return_kv=False):
+    h, new_kv = L.attention_apply(
+        blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg, positions,
+        is_local, kv_cache=kv, cache_pos=cache_pos, n_prefix=n_prefix,
+        return_kv=return_kv)
+    x = x + h
+    if "moe" in blk:
+        h, aux = L.moe_apply(blk["moe"], L.rms_norm(x, blk["ln2"], cfg.norm_eps), cfg)
+        if "mlp" in blk:  # arctic: dense residual in parallel with MoE
+            h = h + L.mlp_apply(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps), cfg)
+    elif "mlp" in blk:
+        h, aux = L.mlp_apply(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+                             , cfg), jnp.float32(0.0)
+    else:
+        h, aux = 0.0, jnp.float32(0.0)
+    return x + h, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# train/eval forward (no cache)
+# ---------------------------------------------------------------------------
+
+
+def hidden_states(params, cfg: ModelConfig, tokens: Array,
+                  frontend_embs: Optional[Array] = None,
+                  remat: bool = True) -> Tuple[Array, Array]:
+    """tokens (B, S_text) -> final hidden (B, S_total, D), aux_loss."""
+    x, n_prefix = _embed(params, cfg, tokens, frontend_embs)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if cfg.family in ("ssm", "hybrid"):
+        x = _ssm_stack(params, cfg, x, positions, remat)
+        aux = jnp.float32(0.0)
+    else:
+        def body(x, scanned):
+            blk, is_local = scanned
+            x, _, aux = _attn_block(blk, x, cfg, positions, is_local,
+                                    n_prefix=n_prefix)
+            return x, aux
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, (params["layers"], _is_local_arr(cfg)))
+        aux = jnp.sum(auxs)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            frontend_embs: Optional[Array] = None,
+            remat: bool = True) -> Tuple[Array, Array]:
+    """tokens (B, S_text) -> logits (B, S_total, V), aux_loss (scalar)."""
+    x, aux = hidden_states(params, cfg, tokens, frontend_embs, remat)
+    return _logits(params, cfg, x), aux
+
+
+def _slice_layers(tree, lo: int, hi: int):
+    return jax.tree.map(lambda v: v[lo:hi], tree)
+
+
+def _ssm_stack(params, cfg: ModelConfig, x, positions, remat,
+               period_blocks=True):
+    """Mamba2 stack; for 'hybrid', one SHARED attn block every `period`."""
+    def body(x, blk):
+        h, _ = L.mamba2_apply(
+            blk["mamba"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg)
+        return x + h, None
+    if remat:
+        body = jax.checkpoint(body)
+
+    if cfg.family == "ssm" or not cfg.shared_attn_period:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    done = 0
+    for g in range(n_groups):
+        grp = _slice_layers(params["layers"], g * period, (g + 1) * period)
+        x, _ = jax.lax.scan(body, x, grp)
+        done = (g + 1) * period
+        x, _, _ = _attn_block(params["shared"], x, cfg, positions,
+                              jnp.bool_(False))
+    if done < cfg.n_layers:
+        grp = _slice_layers(params["layers"], done, cfg.n_layers)
+        x, _ = jax.lax.scan(body, x, grp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, Array]:
+    """Allocate the decode cache for `batch` sequences of up to `max_seq`."""
+    c: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    hkv, dh = cfg.padded_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.n_layers, batch, max_seq, hkv, dh)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        W = cfg.ssm_conv_width
+        c["ssm"] = jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32)
+        c["conv_x"] = jnp.zeros((cfg.n_layers, batch, W - 1, cfg.d_inner),
+                                dtype)
+        c["conv_bc"] = jnp.zeros((cfg.n_layers, batch, W - 1, 2 * N), dtype)
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        n_inv = cfg.n_layers // cfg.shared_attn_period
+        c["shared_k"] = jnp.zeros((n_inv, batch, max_seq, hkv, dh), dtype)
+        c["shared_v"] = jnp.zeros((n_inv, batch, max_seq, hkv, dh), dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, cache: Dict,
+            frontend_embs: Optional[Array] = None) -> Tuple[Array, Dict]:
+    """Run the prompt, fill the cache, return last-position logits."""
+    x, n_prefix = _embed(params, cfg, tokens, frontend_embs)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    cache = dict(cache)
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _ssm_stack_cached(params, cfg, x, positions, cache,
+                                     decode=False)
+    else:
+        def body(x, scanned):
+            blk, is_local, ck, cv = scanned
+            x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
+                                       kv=(ck, cv), cache_pos=jnp.int32(0),
+                                       n_prefix=n_prefix)
+            return x, new_kv
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
+        cache["k"], cache["v"] = ck, cv
+    cache["pos"] = jnp.int32(S)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict
+                ) -> Tuple[Array, Dict]:
+    """token (B, 1) -> logits (B, 1, V); cache advanced by one position."""
+    x = jnp.take(params["embed"], token, axis=0)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    cache = dict(cache)
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _ssm_stack_cached(params, cfg, x, positions, cache,
+                                     decode=True)
+    else:
+        def body(x, scanned):
+            blk, is_local, ck, cv = scanned
+            x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
+                                       kv=(ck, cv), cache_pos=pos)
+            return x, new_kv
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
+        cache["k"], cache["v"] = ck, cv
+    cache["pos"] = pos + 1
+    return _logits(params, cfg, x), cache
+
+
+def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
+                      decode: bool):
+    pos = cache["pos"]
+
+    def body(x, scanned):
+        blk, ssm_st, cx, cbc = scanned
+        h, (new_ssm, new_conv) = L.mamba2_apply(
+            blk["mamba"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg,
+            ssm_state=ssm_st, conv_state=(cx, cbc) if decode else None,
+            decode=decode)
+        return x + h, (new_ssm, new_conv[0], new_conv[1])
+
+    if cfg.family == "ssm" or not cfg.shared_attn_period:
+        x, (ssm, cx, cbc) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv_x"],
+                      cache["conv_bc"]))
+        cache["ssm"], cache["conv_x"], cache["conv_bc"] = ssm, cx, cbc
+        return x, cache
+
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    new_ssm, new_cx, new_cbc, new_k, new_v = [], [], [], [], []
+    done = 0
+
+    def run_group(x, lo, hi):
+        return jax.lax.scan(
+            body, x, (_slice_layers(params["layers"], lo, hi),
+                      cache["ssm"][lo:hi], cache["conv_x"][lo:hi],
+                      cache["conv_bc"][lo:hi]))
+
+    for g in range(n_groups):
+        x, (s_ssm, s_cx, s_cbc) = run_group(x, g * period, (g + 1) * period)
+        new_ssm.append(s_ssm); new_cx.append(s_cx); new_cbc.append(s_cbc)
+        x, kv, _ = _attn_block(
+            params["shared"], x, cfg, positions, jnp.bool_(False),
+            kv=(cache["shared_k"][g], cache["shared_v"][g]),
+            cache_pos=pos if decode else jnp.int32(0))
+        new_k.append(kv[0]); new_v.append(kv[1])
+        done = (g + 1) * period
+    if done < cfg.n_layers:
+        x, (s_ssm, s_cx, s_cbc) = run_group(x, done, cfg.n_layers)
+        new_ssm.append(s_ssm); new_cx.append(s_cx); new_cbc.append(s_cbc)
+    cache["ssm"] = jnp.concatenate(new_ssm, axis=0)
+    cache["conv_x"] = jnp.concatenate(new_cx, axis=0)
+    cache["conv_bc"] = jnp.concatenate(new_cbc, axis=0)
+    cache["shared_k"] = jnp.stack(new_k, axis=0)
+    cache["shared_v"] = jnp.stack(new_v, axis=0)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+CE_TARGET_ELEMS = 2e9  # global fp32 logits elements per CE chunk
+
+
+def _ce_chunk(batch: int, seq: int, vocab: int) -> int:
+    """Vocab/batch-adaptive CE chunk: bound the transient logits tensor to
+    ~CE_TARGET_ELEMS global elements (8 GB fp32 -> ~32 MB/device on the
+    production mesh)."""
+    c = int(CE_TARGET_ELEMS / max(batch * vocab, 1))
+    c = 1 << max(c.bit_length() - 1, 5)  # floor pow2, >= 32
+    return max(32, min(1024, c, seq))
+
+
+def lm_loss(params, cfg: ModelConfig, tokens: Array,
+            frontend_embs: Optional[Array] = None,
+            remat: bool = True) -> Array:
+    """Next-token CE over the text positions (frontend prefix excluded).
+
+    The (B, S, V) logits tensor is never materialised: CE is a remat'd
+    scan over sequence chunks, so peak temp is (B, CE_CHUNK, V) -- at
+    gemma2's 256k vocab this is the difference between 40 GB and 1.3 GB of
+    per-device loss workspace.
+    """
+    x, aux = hidden_states(params, cfg, tokens, frontend_embs, remat)
+    n_front = x.shape[1] - tokens.shape[1]
+    x = x[:, n_front:, :]
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+
+    xs, tgt = x[:, :-1, :], tokens[:, 1:]
+    B, S1, D = xs.shape
+    c = _ce_chunk(B, S1, cfg.vocab_size)
+    nc = (S1 + c - 1) // c
+    pad = nc * c - S1
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)), constant_values=-1)
+    xs = xs.reshape(B, nc, c, D).swapaxes(0, 1)       # (nc, B, c, D)
+    tgt = tgt.reshape(B, nc, c).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        xc, tc = inp
+        logits = L.softcap((xc @ head).astype(jnp.float32), cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        sel = jnp.take_along_axis(
+            logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        valid = (tc >= 0).astype(jnp.float32)
+        return carry + jnp.sum((lse - sel) * valid), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk), jnp.float32(0.0), (xs, tgt))
+    return total / (B * S1) + aux

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, adamw_update, global_norm, init_opt_state  # noqa: F401
+from .schedules import make_schedule, warmup_cosine, wsd  # noqa: F401

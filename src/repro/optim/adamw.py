@@ -1,0 +1,96 @@
+"""AdamW with global-norm clipping, configurable moment dtypes (memory-
+critical for the 480B-parameter dry-runs), decoupled weight decay, and
+grad-accumulation support.  Pure-pytree implementation (no optax on the
+box); update math in fp32 regardless of storage dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import make_schedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"           # "cosine" | "wsd"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"      # "bfloat16" halves optimizer memory
+    accum_steps: int = 1
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.accum_steps > 1:
+        state["accum"] = jax.tree.map(zeros, params)
+        state["micro"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def global_norm(tree) -> Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    """One optimizer step. Returns (new_params, new_state)."""
+    sched = make_schedule(cfg.schedule, peak_lr=cfg.peak_lr,
+                          warmup=cfg.warmup, total=cfg.total_steps)
+    step = state["step"] + 1
+    lr = sched(step)
+
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh, vh = m32 / bc1, v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = dict(state, step=step, m=new_m, v=new_v)
+    return new_p, new_state
+
+
+def accumulate_grads(state, grads, cfg: OptConfig):
+    """Error-free micro-batch accumulation (for grad-accum training)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    acc = jax.tree.map(
+        lambda a, g: (a.astype(jnp.float32) + g.astype(jnp.float32)).astype(mdt),
+        state["accum"], grads)
+    return dict(state, accum=acc, micro=state["micro"] + 1)

@@ -1,0 +1,38 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM's schedule)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (last decay_frac of training).
+
+    MiniCPM (arXiv:2404.06395): exponential-ish final decay; we use the
+    paper's reported 10% decay window with exponential anneal.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total * decay_frac, 1.0)
+    decay_start = total - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+    out = jnp.where(step < warmup, warm, peak_lr)
+    return jnp.where(step > decay_start, dec, out)
+
+
+def make_schedule(name: str, **kw):
+    if name == "cosine":
+        return lambda s: warmup_cosine(s, **kw)
+    if name == "wsd":
+        return lambda s: wsd(s, **kw)
+    raise ValueError(name)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device -- the 512-device XLA flag
+# lives exclusively in launch/dryrun.py (see the brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,95 @@
+"""Per-assigned-architecture smoke tests: REDUCED config of the same
+family, one forward/train step on CPU, output shapes + no NaNs (the FULL
+configs are exercised only via the dry-run)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params, axes = lm.init(key, cfg)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.family == "vlm":
+        fe = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+
+    logits, aux = lm.forward(params, cfg, toks, fe, remat=False)
+    s_total = S + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, s_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(p, cfg, toks, fe))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves), \
+        f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params, _ = lm.init(key, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.family == "vlm":
+        fe = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    cache = lm.init_cache(cfg, B, S + 4 + cfg.n_frontend_tokens)
+    logits, cache = lm.prefill(params, cfg, toks, cache, fe)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = lm.decode_step(params, cfg, tok, cache)
+        assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN decode"
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (no drift)."""
+    spec = {
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 0, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d, arch
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff and cfg.vocab_size == v, arch
+    assert get_config("mamba2-130m").ssm_state == 128
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("qwen2-moe-a2.7b").n_experts == 60
+    assert get_config("qwen2-moe-a2.7b").top_k == 4
+    assert get_config("arctic-480b").n_experts == 128
+    assert get_config("arctic-480b").top_k == 2
+    assert get_config("gemma2-9b").logit_softcap == 30.0
+    assert get_config("qwen3-14b").qk_norm
+    assert get_config("minicpm-2b").lr_schedule == "wsd"
+
+
+def test_arctic_is_480b_scale():
+    from repro.launch.specs import param_shapes_and_axes, param_count
+    shapes, _ = param_shapes_and_axes(get_config("arctic-480b"))
+    n = param_count(shapes)
+    assert 4.2e11 < n < 5.4e11, f"arctic params {n:.3e}"

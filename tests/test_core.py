@@ -1,0 +1,245 @@
+"""Core macro-model tests: bit-true arithmetic, ADC, error statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CCIMConfig, DEFAULT_CONFIG, baselines, cim_matmul, cim_matmul_int,
+    complex_cim_matmul, contribution_table, costmodel, fabricate,
+    hybrid_mac_bit_true, hybrid_mac_fast, hybrid_mac_ideal, ideal_macro,
+    quantize_smf, sar_adc, smf_scale,
+)
+
+CFG = DEFAULT_CONFIG
+
+
+def _rand_q(key, shape):
+    return jax.random.randint(key, shape, -127, 128).clip(-127, 127)
+
+
+# ---------------------------------------------------------------------------
+# construction facts from the paper
+# ---------------------------------------------------------------------------
+
+
+def test_top3_contribution_is_half():
+    ct = contribution_table(CFG)
+    top3 = float(np.sort(ct.flatten())[-3:].sum())
+    assert abs(top3 - 0.508) < 0.002  # paper Fig.2: "half"
+
+
+def test_dcim_range_pm64():
+    assert CFG.dcim_max == 64  # paper: DCIM in [-64, +64]
+    assert CFG.dcim_products == ((6, 6), (6, 5), (5, 6))
+    assert CFG.dcim_lsb == 2 ** 11
+
+
+def test_acim_fits_7bit_adc():
+    """Max |ACIM|/2^11 = 62 < 64: the hybrid split makes 7b sufficient."""
+    full = jnp.full((1, 16), 127)
+    out = hybrid_mac_ideal(full, full, CFG)
+    # all-max inputs: exact = 16*127^2; DCIM = 64; code <= 62
+    assert int(out[0]) == 16 * 127 * 127 // 2048  # == 126
+
+
+def test_adc_dnl_sizing_rule():
+    assert abs(costmodel.adc_dnl_lsb_rms(CFG) - 0.33) < 0.01  # paper: 0.33
+
+
+def test_density_matches_paper():
+    assert abs(costmodel.density_mb_per_mm2() - 1.80) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# bit-true arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_macro_error_at_most_half_adc_lsb():
+    key = jax.random.PRNGKey(1)
+    xq = _rand_q(key, (64, 16))
+    wq = _rand_q(jax.random.PRNGKey(2), (64, 16))
+    out = hybrid_mac_bit_true(xq, wq, ideal_macro(CFG), CFG)
+    err = np.asarray(out["y8"] * CFG.dcim_lsb - out["exact"])
+    assert np.abs(err).max() <= CFG.dcim_lsb // 2  # rounding only
+
+
+def test_fast_equals_bit_true_for_ideal_macro():
+    key = jax.random.PRNGKey(3)
+    xq = _rand_q(key, (32, 16))
+    wq = _rand_q(jax.random.PRNGKey(4), (32, 16))
+    a = hybrid_mac_bit_true(xq, wq, ideal_macro(CFG), CFG)
+    b = hybrid_mac_fast(xq, wq, None, CFG)
+    np.testing.assert_array_equal(a["y8"], b["y8"])
+    np.testing.assert_array_equal(a["dcim"], b["dcim"])
+    np.testing.assert_array_equal(a["a_ideal"], b["a_ideal"])
+
+
+def test_fast_noise_moment_matches_bit_true():
+    """Fast path's matched Gaussian ~ bit-true mismatch std (2nd moment).
+
+    Compared with dynamic (comparator) noise off, isolating the cap-
+    mismatch term whose variance the fast path matches analytically."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, comparator_noise_lsb=0.0,
+                              sigma_vref_pol=0.0)
+    n = 4000
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    xq = _rand_q(ks[0], (n, 16))
+    wq = _rand_q(ks[1], (n, 16))
+    macro = fabricate(ks[2], cfg)
+    bt = hybrid_mac_bit_true(xq, wq, macro, cfg)
+    err_bt = np.asarray(bt["a_real"] - bt["a_ideal"], np.float64)
+    ft = hybrid_mac_fast(xq, wq, ks[3], cfg)
+    err_ft = np.asarray(ft["a_real"] - ft["a_ideal"], np.float64)
+    # same scale within 25% (bit-true has per-die frozen pattern)
+    assert 0.75 < err_ft.std() / max(err_bt.std(), 1e-9) < 1.33
+
+
+def test_sar_adc_ideal_is_midtread_rounding():
+    v = jnp.linspace(-63.4, 62.4, 253)
+    code = sar_adc(v, jnp.zeros((7,)), CFG)
+    np.testing.assert_array_equal(np.asarray(code),
+                                  np.clip(np.floor(np.asarray(v) + 0.5),
+                                          -64, 63))
+
+
+def test_sar_adc_monotonic_with_mismatch():
+    macro = fabricate(jax.random.PRNGKey(7), CFG)
+    v = jnp.linspace(-64, 63, 1000)
+    code = np.asarray(sar_adc(v, macro.adc_cap_eps, CFG))
+    assert (np.diff(code) >= 0).all()  # SAR with cap mismatch stays monotone
+
+
+# ---------------------------------------------------------------------------
+# RMS error: the paper's headline accuracy claim (Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def test_rms_error_near_paper_value():
+    """Uniform inputs, bit-true hybrid path: RMS ~ 0.435% of full scale."""
+    n = 8192
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    xq = _rand_q(ks[0], (n, 16))
+    wq = _rand_q(ks[1], (n, 16))
+    macro = fabricate(ks[2], CFG)
+    out = hybrid_mac_bit_true(xq, wq, macro, CFG, noise_key=ks[3])
+    err = np.asarray(out["y8"] * CFG.dcim_lsb - out["exact"], np.float64)
+    fs = 2 * 64 * CFG.dcim_lsb  # output full scale (8b at 2^11)
+    rms_pct = 100 * np.sqrt(np.mean((err / fs) ** 2))
+    # paper: 0.435% measured (model calibrated: 0.45 +/- 0.05 here)
+    assert 0.35 < rms_pct < 0.55, rms_pct
+    # and the static-only (mismatch + rounding) floor sits below it
+    out0 = hybrid_mac_bit_true(xq, wq, macro, CFG)
+    err0 = np.asarray(out0["y8"] * CFG.dcim_lsb - out0["exact"], np.float64)
+    rms0 = 100 * np.sqrt(np.mean((err0 / fs) ** 2))
+    assert rms0 < rms_pct
+
+
+def test_hybrid_beats_all_analog():
+    """The paper's motivation: all-analog CIM has worse MSB mismatch.
+
+    Static mismatch isolated (no dynamic noise / polarity asymmetry);
+    averaged over dies so a lucky draw can't flip the comparison."""
+    import dataclasses
+    cfg_h = dataclasses.replace(CFG, sigma_vref_pol=0.0)
+    cfg_a = dataclasses.replace(baselines.all_analog_config(CFG),
+                                sigma_vref_pol=0.0)
+    n = 4096
+    ks = jax.random.split(jax.random.PRNGKey(13), 2)
+    xq = _rand_q(ks[0], (n, 16))
+    wq = _rand_q(ks[1], (n, 16))
+
+    def die_std(cfg, seed):
+        macro = fabricate(jax.random.PRNGKey(seed), cfg)
+        out = hybrid_mac_bit_true(xq, wq, macro, cfg)
+        return np.asarray(out["y8"] * cfg.dcim_lsb - out["exact"],
+                          np.float64).std()
+
+    std_h = np.mean([die_std(cfg_h, s) for s in range(3)])
+    std_a = np.mean([die_std(cfg_a, s) for s in range(3)])
+    assert std_h < std_a, (std_h, std_a)
+
+
+# ---------------------------------------------------------------------------
+# GEMM + complex paths
+# ---------------------------------------------------------------------------
+
+
+def test_cim_matmul_int_matches_chunked_ideal():
+    key = jax.random.PRNGKey(17)
+    xq = _rand_q(key, (8, 64))
+    wq = _rand_q(jax.random.PRNGKey(18), (64, 8))
+    y = cim_matmul_int(xq, wq, None, CFG, None, "fast")
+    exact = np.asarray(xq) @ np.asarray(wq)
+    # 4 chunks, each off by <= 2^10
+    assert np.abs(np.asarray(y) - exact).max() <= 4 * CFG.dcim_lsb // 2
+
+
+def test_complex_mac_accuracy():
+    key = jax.random.PRNGKey(19)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = (jax.random.normal(k1, (8, 64)) + 1j * jax.random.normal(k2, (8, 64))
+         ).astype(jnp.complex64)
+    w = (jax.random.normal(k2, (64, 8)) + 1j * jax.random.normal(k3, (64, 8))
+         ).astype(jnp.complex64)
+    y = complex_cim_matmul(x, w, CFG, noise_key=key)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.25  # random-sum cancellation inflates rel err; FS-relative
+    # full-scale-relative error is what the paper reports:
+    fs = float(jnp.abs(ref).max())
+    assert float(jnp.abs(y - ref).max()) / fs < 0.2
+
+
+def test_figS1_cost_savings_directionally_match():
+    s = costmodel.figS1_comparison(CFG)["savings"]
+    assert 25 < s["area_pct_vs_duplicated"] < 45      # paper: 35%
+    assert 50 < s["latency_pct_vs_sequential"] < 60   # paper: 54%
+    assert 15 < s["power_pct_vs_duplicated"] < 33     # paper: 24%
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_quantize_range(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (32,)) * 10
+    s = smf_scale(x)
+    q = quantize_smf(x, s)
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    assert int(jnp.max(jnp.abs(q))) == 127  # max-abs scaling is tight
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_ideal_macro_halflsb(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_q(k1, (4, 16))
+    wq = _rand_q(k2, (4, 16))
+    out = hybrid_mac_fast(xq, wq, None, CFG)
+    err = np.abs(np.asarray(out["y8"] * CFG.dcim_lsb - out["exact"]))
+    assert err.max() <= CFG.dcim_lsb // 2
+    assert np.abs(np.asarray(out["dcim"])).max() <= CFG.dcim_max
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_prop_gemm_scale_invariance(seed, m):
+    """Dequantized CIM GEMM error is bounded relative to full scale."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, 32))
+    w = jax.random.normal(k2, (32, 4))
+    y = cim_matmul(x, w, CFG)
+    ref = x @ w
+    fs = float(jnp.abs(x).max() * jnp.abs(w).max() * 32)
+    assert float(jnp.abs(y - ref).max()) < 0.05 * fs

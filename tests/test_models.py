@@ -1,0 +1,177 @@
+"""Model-layer semantics: flash==plain attention, SSD chunked==recurrent,
+prefill+decode==forward, MoE dispatch conservation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+            d_ff=128, vocab_size=256, flash_block=16, dtype="float32")
+
+
+def _dense_cfg(**kw):
+    return ModelConfig(name="t", family="dense", **{**BASE, **kw})
+
+
+def test_flash_equals_plain_attention():
+    cfg_f = _dense_cfg(attn_impl="flash")
+    cfg_p = _dense_cfg(attn_impl="plain")
+    key = jax.random.PRNGKey(0)
+    p, _ = L.attention_init(key, cfg_f, jnp.float32)
+    x = jax.random.normal(key, (2, 48, cfg_f.d_model))
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48))
+    of, _ = L.attention_apply(p, x, cfg_f, pos, jnp.bool_(False))
+    op, _ = L.attention_apply(p, x, cfg_p, pos, jnp.bool_(False))
+    np.testing.assert_allclose(np.asarray(of), np.asarray(op),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_equals_plain_sliding_window():
+    cfg_f = _dense_cfg(attn_impl="flash", sliding_window=8,
+                       layer_pattern="local_global")
+    cfg_p = dataclasses.replace(cfg_f, attn_impl="plain")
+    key = jax.random.PRNGKey(1)
+    p, _ = L.attention_init(key, cfg_f, jnp.float32)
+    x = jax.random.normal(key, (2, 40, cfg_f.d_model))
+    pos = jnp.broadcast_to(jnp.arange(40)[None], (2, 40))
+    for loc in (True, False):
+        of, _ = L.attention_apply(p, x, cfg_f, pos, jnp.bool_(loc))
+        op, _ = L.attention_apply(p, x, cfg_p, pos, jnp.bool_(loc))
+        np.testing.assert_allclose(np.asarray(of), np.asarray(op),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_flash_gradients_match_plain():
+    """Custom-VJP flash backward == autodiff through plain attention."""
+    for extra in ({}, dict(attn_softcap=50.0),
+                  dict(sliding_window=8, layer_pattern="local_global")):
+        cfg_f = _dense_cfg(attn_impl="flash", **extra)
+        cfg_p = dataclasses.replace(cfg_f, attn_impl="plain")
+        key = jax.random.PRNGKey(42)
+        p, _ = L.attention_init(key, cfg_f, jnp.float32)
+        x = jax.random.normal(key, (2, 48, cfg_f.d_model)) * 0.5
+        pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48))
+
+        def loss(params, xx, cfg):
+            o, _ = L.attention_apply(params, xx, cfg, pos, jnp.bool_(True))
+            return jnp.sum(o * o)
+
+        gf = jax.grad(loss, argnums=(0, 1))(p, x, cfg_f)
+        gp = jax.grad(loss, argnums=(0, 1))(p, x, cfg_p)
+        for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-4)
+
+
+def test_ssd_chunked_equals_recurrent():
+    """Mamba2 chunked (train) path == step-by-step recurrence (decode)."""
+    cfg = ModelConfig(name="s", family="ssm", n_layers=1, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=64,
+                      ssm_state=8, ssm_head_dim=8, ssm_chunk=8,
+                      dtype="float32")
+    key = jax.random.PRNGKey(2)
+    p, _ = L.mamba2_init(key, cfg, jnp.float32)
+    B, S = 2, 24
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    y_par, (state_par, _) = L.mamba2_apply(p, x, cfg)
+
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    conv = (jnp.zeros((B, W - 1, cfg.d_inner), jnp.float32),
+            jnp.zeros((B, W - 1, 2 * N), jnp.float32))
+    outs = []
+    for t in range(S):
+        y, (state, conv) = L.mamba2_apply(p, x[:, t:t + 1], cfg,
+                                          ssm_state=state, conv_state=conv,
+                                          decode=True)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state_par), np.asarray(state),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("family,extra", [
+    ("dense", {}),
+    ("dense", dict(layer_pattern="local_global", sliding_window=8,
+                   attn_softcap=50.0, logit_softcap=30.0)),
+    ("moe", dict(n_experts=8, top_k=2, moe_d_ff=64, d_ff=0)),
+    ("ssm", dict(ssm_state=8, ssm_head_dim=16, ssm_chunk=8, n_heads=0,
+                 n_kv_heads=0, d_ff=0)),
+    ("hybrid", dict(ssm_state=8, ssm_head_dim=16, ssm_chunk=8,
+                    shared_attn_period=2, n_layers=4)),
+])
+def test_prefill_decode_matches_forward(family, extra):
+    """Greedy decode after prefill == argmax of the teacher-forced logits."""
+    cfg = ModelConfig(name="t", family=family, **{**BASE, **extra})
+    key = jax.random.PRNGKey(3)
+    params, _ = lm.init(key, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_fwd, _ = lm.forward(params, cfg, toks, remat=False)
+
+    cache = lm.init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    logits_pre, cache = lm.prefill(params, cfg, toks, cache)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]),
+                               np.asarray(logits_fwd[:, -1]),
+                               rtol=5e-3, atol=5e-4)
+    # decode one step with the true next token == forward on extended seq
+    nxt = jax.random.randint(jax.random.PRNGKey(9), (B, 1), 0,
+                             cfg.vocab_size)
+    logits_dec, cache = lm.decode_step(params, cfg, nxt, cache)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    logits_fwd2, _ = lm.forward(params, cfg, toks2, remat=False)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_fwd2[:, -1]),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_moe_aux_loss_and_balance():
+    cfg = ModelConfig(name="m", family="moe",
+                      **{**BASE, "d_ff": 0},
+                      n_experts=8, top_k=2, moe_d_ff=64)
+    key = jax.random.PRNGKey(5)
+    p, _ = L.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model))
+    y, aux = L.moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) > 0
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_chunked_ce_matches_dense_ce():
+    cfg = _dense_cfg()
+    key = jax.random.PRNGKey(6)
+    params, _ = lm.init(key, cfg)
+    toks = jax.random.randint(key, (2, 40), 0, cfg.vocab_size)
+    loss_chunked = lm.lm_loss(params, cfg, toks, remat=False)
+    logits, aux = lm.forward(params, cfg, toks, remat=False)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, toks[:, 1:, None], axis=-1)[..., 0]
+    np.testing.assert_allclose(float(loss_chunked), float(nll.mean() + aux),
+                               rtol=1e-5)
+
+
+def test_cim_mode_forward_and_grad():
+    """The paper's macro as execution mode: close to fp output, grads flow."""
+    cfg = _dense_cfg(cim_mode=True)
+    cfg_fp = _dense_cfg()
+    key = jax.random.PRNGKey(7)
+    params, _ = lm.init(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    loss_cim = lm.lm_loss(params, cfg, toks, remat=False)
+    loss_fp = lm.lm_loss(params, cfg_fp, toks, remat=False)
+    assert abs(float(loss_cim) - float(loss_fp)) / float(loss_fp) < 0.2
+    g = jax.grad(lambda p: lm.lm_loss(p, cfg, toks, remat=False))(params)
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda v: float(jnp.sum(jnp.abs(v))), g))
+    assert np.isfinite(gn) and gn > 0
