@@ -1,20 +1,47 @@
 """Shared benchmark utilities."""
+import json
+import os
 import sys
 import time
-import os
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+_RECORDS = []
 
-def time_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+
+def time_us(fn, *args, iters: int = 5, warmup: int = 2,
+            reduce: str = "mean") -> float:
     import jax
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+        ts.append(time.perf_counter() - t0)
+    agg = min(ts) if reduce == "min" else sum(ts) / len(ts)
+    return agg * 1e6
 
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def record(op: str, shape, us: float, speedup_vs_prev=None, note: str = ""):
+    """Accumulate one machine-readable benchmark row (see write_bench_json)."""
+    _RECORDS.append(dict(
+        op=op,
+        shape=list(shape),
+        us=round(us, 1),
+        speedup_vs_prev=None if speedup_vs_prev is None else round(speedup_vs_prev, 2),
+        note=note,
+    ))
+
+
+def write_bench_json(path: str = _BENCH_JSON) -> str:
+    """Dump accumulated records so later PRs have a perf trajectory."""
+    with open(path, "w") as f:
+        json.dump(dict(records=_RECORDS), f, indent=2)
+        f.write("\n")
+    return path

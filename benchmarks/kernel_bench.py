@@ -1,14 +1,30 @@
 """Kernel micro-benchmarks (interpret-mode correctness + host timing) and
 the fast-vs-bit-true emulation fidelity/speed trade (the TPU adaptation:
-2 matmuls instead of 49 bit-plane products -- see DESIGN.md §2)."""
+a handful of matmuls instead of 49 bit-plane products -- see DESIGN.md §2).
+
+Includes the old-vs-new comparison for this repo's two GEMM hot paths:
+the matmul-ized fast-fidelity GEMM vs the legacy elementwise-broadcast
+implementation, and the complex GEMM (fused/matmul-ized vs broadcast
+4-pass).  Rows are also accumulated into BENCH_kernels.json via
+common.record for the perf trajectory.  Host timings use min-of-iters
+(robust to scheduler noise on small shared machines).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, time_us
+from .common import emit, record, time_us, write_bench_json
 from repro.core import DEFAULT_CONFIG, cim_matmul, fabricate
+from repro.core.ccim import cim_matmul_int
+from repro.core.complex_mac import complex_cim_matmul_int
 from repro.kernels.ccim_matmul import ccim_matmul_ref
+from repro.kernels.ccim_complex import (ccim_complex_matmul_int,
+                                        ccim_complex_matmul_ref)
 from repro.kernels.int8_matmul import int8_matmul
+
+
+def _rand_q(key, shape):
+    return jax.random.randint(key, shape, -127, 128).clip(-127, 127)
 
 
 def run(seed: int = 0):
@@ -33,16 +49,80 @@ def run(seed: int = 0):
          f"max FS-rel err {float(jnp.abs(y_bit-ref).max())/fs:.4f}")
     emit("kern.fast_emulation", us_fast,
          f"max FS-rel err {float(jnp.abs(y_fast-ref).max())/fs:.4f}; "
-         f"{us_bit/us_fast:.1f}x faster than bit-true (2 vs 49 matmuls)")
+         f"{us_bit/us_fast:.1f}x faster than bit-true")
+    record("bit_true_emulation", (M, K, N), us_bit)
+    record("fast_emulation", (M, K, N), us_fast, us_bit / us_fast,
+           "vs bit_true oracle")
 
-    qx = jax.random.randint(k1, (M, K), -127, 128).clip(-127, 127).astype(jnp.int8)
-    qw = jax.random.randint(k2, (K, N), -127, 128).clip(-127, 127).astype(jnp.int8)
+    # ---- fast-fidelity GEMM: matmul-ized (new) vs broadcast (old) --------
+    M2, K2, N2 = 256, 1024, 256
+    qx2 = _rand_q(k1, (M2, K2))
+    qw2 = _rand_q(k2, (K2, N2))
+    f_bcast = jax.jit(lambda a, b: cim_matmul_int(
+        a, b, None, cfg, None, "fast_broadcast"))
+    f_mm = jax.jit(lambda a, b: cim_matmul_int(
+        a, b, None, cfg, None, "fast", use_pallas=False))
+    us_bcast = time_us(f_bcast, qx2, qw2, iters=3, warmup=1, reduce="min")
+    us_mm = time_us(f_mm, qx2, qw2, iters=8, warmup=2, reduce="min")
+    assert (np.asarray(f_bcast(qx2, qw2)) == np.asarray(f_mm(qx2, qw2))).all()
+    emit("kern.fast_gemm_broadcast", us_bcast,
+         f"{M2}x{K2}x{N2} legacy elementwise-broadcast fast path")
+    emit("kern.fast_gemm_matmulized", us_mm,
+         f"bit-identical; {us_bcast/us_mm:.1f}x faster than broadcast")
+    record("fast_gemm_broadcast", (M2, K2, N2), us_bcast)
+    record("fast_gemm_matmulized", (M2, K2, N2), us_mm, us_bcast / us_mm,
+           "vs broadcast fast path (bit-identical)")
+
+    # ---- complex GEMM: matmul-ized 4-pass (new) vs broadcast 4-pass ------
+    kk = jax.random.split(key, 4)
+    cxr, cxi = _rand_q(kk[0], (M2, K2)), _rand_q(kk[1], (M2, K2))
+    cwr, cwi = _rand_q(kk[2], (K2, N2)), _rand_q(kk[3], (K2, N2))
+    f_cbcast = jax.jit(lambda a, b, c, d: complex_cim_matmul_int(
+        a, b, c, d, None, cfg, None, "fast_broadcast"))
+    f_cmm = jax.jit(lambda a, b, c, d: complex_cim_matmul_int(
+        a, b, c, d, None, cfg, None, "fast", use_pallas=False))
+    us_cb = time_us(f_cbcast, cxr, cxi, cwr, cwi, iters=2, warmup=1,
+                    reduce="min")
+    us_cm = time_us(f_cmm, cxr, cxi, cwr, cwi, iters=6, warmup=2,
+                    reduce="min")
+    emit("kern.complex_gemm_broadcast", us_cb,
+         f"{M2}x{K2}x{N2} complex, 4 broadcast sub-MAC passes")
+    emit("kern.complex_gemm_matmulized", us_cm,
+         f"bit-identical; {us_cb/us_cm:.1f}x faster than broadcast")
+    record("complex_gemm_broadcast", (M2, K2, N2), us_cb)
+    record("complex_gemm_matmulized", (M2, K2, N2), us_cm, us_cb / us_cm,
+           "vs broadcast 4-pass (bit-identical)")
+
+    # ---- fused single-pass complex kernel: parity (interpret mode) -------
+    # interpret mode is a correctness harness, not a perf proxy: structure
+    # (one weight-tile residency per grid step) is validated in tests
+    Mc, Kc, Nc = 16, 64, 16
+    fxr, fxi = _rand_q(kk[0], (Mc, Kc)), _rand_q(kk[1], (Mc, Kc))
+    fwr, fwi = _rand_q(kk[2], (Kc, Nc)), _rand_q(kk[3], (Kc, Nc))
+    yr, yi = ccim_complex_matmul_int(fxr, fxi, fwr, fwi,
+                                     use_pallas=True, interpret=True)
+    rr, ri = ccim_complex_matmul_ref(fxr, fxi, fwr, fwi)
+    ok = (np.asarray(yr) == np.asarray(rr)).all() and (
+        np.asarray(yi) == np.asarray(ri)).all()
+    emit("kern.complex_fused_parity", 0.0,
+         f"fused Re+Im kernel vs 4-call ref: {'bit-identical' if ok else 'MISMATCH'}")
+    record("complex_fused_kernel", (Mc, Kc, Nc), 0.0, None,
+           "interpret-mode parity vs 4-call reference: "
+           + ("bit-identical" if ok else "MISMATCH"))
+
+    qx = _rand_q(k1, (M, K)).astype(jnp.int8)
+    qw = _rand_q(k2, (K, N)).astype(jnp.int8)
     f_ref = jax.jit(ccim_matmul_ref)
     us_ref = time_us(f_ref, qx, qw, iters=3)
     emit("kern.ccim_ref_oracle", us_ref, f"{M}x{K}x{N} int GEMM (jnp oracle)")
+    record("ccim_ref_oracle", (M, K, N), us_ref)
     f_i8 = jax.jit(lambda a, b: int8_matmul(a, b, use_pallas=False))
     us_i8 = time_us(f_i8, x, w, iters=3)
     emit("kern.int8_w8a8", us_i8, "all-digital CIM baseline [11] numerics")
+    record("int8_w8a8", (M, K, N), us_i8)
+
+    path = write_bench_json()
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

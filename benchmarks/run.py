@@ -33,6 +33,8 @@ def main() -> None:
         except Exception as e:  # keep the suite running; report at the end
             failures.append((name, repr(e)))
             print(f"# FAILED: {name}: {e!r}")
+    from .common import write_bench_json
+    write_bench_json()  # idempotent: flush whatever rows were recorded
     if failures:
         sys.exit(1)
 

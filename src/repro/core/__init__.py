@@ -11,6 +11,7 @@ from .ccim import (  # noqa: F401
     fabricate,
     hybrid_mac_bit_true,
     hybrid_mac_fast,
+    hybrid_mac_fast_gemm,
     hybrid_mac_ideal,
     ideal_macro,
     quantize_smf,

@@ -388,12 +388,140 @@ def hybrid_mac_fast(
 
 
 # ---------------------------------------------------------------------------
+# Fast path, matmul-ized (the GEMM-shaped formulation of hybrid_mac_fast)
+# ---------------------------------------------------------------------------
+#
+# hybrid_mac_fast applied to a broadcast (M,1,C,L) x (1,N,C,L) pair
+# materializes O(M*N*C*L) intermediates elementwise -- memory-bound.  Every
+# per-chunk quantity it needs is a sum over L of per-element products, so
+# each is ONE batched (C,M,L)x(C,L,N) matmul instead:
+#
+#   exact_c    = x_c . w_c                         (signed int dot)
+#   dcim_c     = sum_j xj_c . (sum_k 2^(j+k)/2^11 * wk_c)   (signed planes,
+#                one dot per distinct x bit-plane -- 2 for the top-3 split)
+#   a_ideal_c  = exact_c - 2^11 * dcim_c
+#   |acim|_c   = |x|_c . |w|_c - 2^11 * dcim_mag_c (unsigned planes)
+#
+# The dots run in float32: every contraction is a sum of <= acc_len
+# products of 7-bit magnitudes (< 2^24), so float32 accumulation is exact
+# and the result is bit-identical to the broadcast formulation -- while the
+# MXU / vector FMA units do the work.  The optimization_barrier keeps XLA
+# from fusing the operand prep into the GEMM loops (which knocks the CPU
+# backend off its fast GEMM path).  This is the default GEMM hot path.
+
+
+_CHUNK_BLOCK = 16  # ADC conversions processed per scan step (cache-sized)
+
+
+def hybrid_mac_fast_gemm(
+    xq: Array,                       # (M, C, L) ints in [-127, 127]
+    wq: Array,                       # (C, L, N) ints in [-127, 127]
+    noise_key: Optional[Array],
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> Array:
+    """Chunked fast-path GEMM; returns sum_c y8_c as (M, N) int32 (unscaled).
+
+    Bit-identical (including the noise draw) to summing hybrid_mac_fast's
+    y8 over the (M,1,C,L) x (1,N,C,L) broadcast of the same operands.
+    The chunk axis is processed _CHUNK_BLOCK conversions at a time inside a
+    scan, so the (Cb, M, N) partials stay cache-resident instead of
+    streaming O(C*M*N) intermediates through memory; noise-free runs need
+    only 1 + #distinct-j GEMMs per step (the magnitude GEMMs feeding the
+    matched variance exist only when a noise_key is given).
+    """
+    M, C, L = xq.shape
+    sx, mx = split_sign_mag(xq)
+    sw, mw = split_sign_mag(wq)
+    xT = lambda v: jnp.transpose(v, (1, 0, 2))              # -> (C, M, L)
+    xf = xT(xq).astype(jnp.float32)
+    wf = wq.astype(jnp.float32)
+    sxf, mxT = xT(sx).astype(jnp.float32), xT(mx)
+    swf = sw.astype(jnp.float32)
+
+    # one x bit-plane per distinct j; the k-planes of w fold into a single
+    # weighted plane per j (2 GEMMs instead of 3 for the top-3 split:
+    # dcim = x6 . (2*w6 + w5) + x5 . w6)
+    by_j: dict = {}
+    for j, k in cfg.dcim_products:
+        by_j.setdefault(j, []).append(k)
+    x_pl, xm_pl, w_pl, wm_pl = [], [], [], []
+    for j, ks in by_j.items():
+        xbit = ((mxT >> j) & 1).astype(jnp.float32)
+        x_pl.append(sxf * xbit)
+        xm_pl.append(xbit)
+        wsum = jnp.zeros_like(wf)
+        for k in ks:
+            wgt = (1 << (j + k)) // cfg.dcim_lsb
+            wsum = wsum + wgt * ((mw >> k) & 1).astype(jnp.float32)
+        w_pl.append(swf * wsum)
+        wm_pl.append(wsum)
+
+    noisy = noise_key is not None
+    ops = [xf, wf, tuple(x_pl), tuple(w_pl)]
+    if noisy:
+        ops += [jnp.abs(xf), jnp.abs(wf), tuple(xm_pl), tuple(wm_pl)]
+        # drawn in the broadcast path's (M, N, C) layout, then re-laid-out,
+        # so noisy results stay bit-identical to hybrid_mac_fast
+        ops.append(jnp.transpose(
+            jax.random.normal(noise_key, (M, wf.shape[-1], C)), (2, 0, 1)))
+    # barrier: keep XLA from fusing operand prep into the GEMM loops (the
+    # CPU backend falls off its fast GEMM path otherwise)
+    ops = jax.lax.optimization_barrier(tuple(ops))
+
+    # pad the chunk axis to the scan block; phantom chunks are masked so
+    # the noisy path sees exactly C conversions, as in silicon
+    cb = min(_CHUNK_BLOCK, C)
+    n_blk = (C + cb - 1) // cb
+    pad = n_blk * cb - C
+    mask = jnp.ones((C,), jnp.int32)
+    blk = lambda v: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1)).reshape(
+        n_blk, cb, *v.shape[1:]
+    )
+    xs = jax.tree_util.tree_map(blk, tuple(ops)) + (blk(mask),)
+
+    dyn_var = (cfg.comparator_noise_lsb * cfg.dcim_lsb) ** 2
+    lsb, half = float(cfg.dcim_lsb), cfg.adc_half_range
+
+    def step(acc, inp):
+        if noisy:
+            bxf, bwf, bx_pl, bw_pl, bmx, bmw, bxm_pl, bwm_pl, bnoise, bmask = inp
+        else:
+            bxf, bwf, bx_pl, bw_pl, bmask = inp
+        # float32 GEMMs and epilogue are exact: every value is an integer
+        # well below 2^24 (|chunk dot| <= acc_len * 127^2)
+        a_real = jnp.matmul(bxf, bwf)                       # (cb, M, N)
+        dcim = sum(jnp.matmul(a, b) for a, b in zip(bx_pl, bw_pl))
+        a_real = a_real - dcim * lsb                        # = ideal ACIM
+        if noisy:
+            a_mag = jnp.matmul(bmx, bmw) - lsb * sum(
+                jnp.matmul(a, b) for a, b in zip(bxm_pl, bwm_pl))
+            var = cfg.sigma_unit**2 * cfg.fast_noise_correction * a_mag
+            a_real = a_real + jnp.sqrt(var + dyn_var) * bnoise
+        code = jnp.clip(jnp.floor(a_real / lsb + 0.5), -half, half - 1)
+        y8 = (dcim + code).astype(jnp.int32) * bmask[:, None, None]
+        return acc + jnp.sum(y8, axis=0), None
+
+    acc0 = jnp.zeros((M, wf.shape[-1]), jnp.int32)
+    out, _ = jax.lax.scan(step, acc0, xs)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Macro-tiled integer matmul (the GEMM engine built from conversions)
 # ---------------------------------------------------------------------------
 
 
 def _pad_to_chunks(k: int, acc_len: int) -> int:
     return (k + acc_len - 1) // acc_len
+
+
+def _kernel_numerics_match(cfg: CCIMConfig) -> bool:
+    """True when ``cfg`` matches the constants the Pallas kernels hardcode
+    (prototype accumulate length, SMF width, top-3 DCIM split, 7b ADC)."""
+    d = DEFAULT_CONFIG
+    return (cfg.acc_len == d.acc_len and cfg.n_mag_bits == d.n_mag_bits
+            and cfg.dcim_products == d.dcim_products
+            and cfg.adc_bits == d.adc_bits)
 
 
 def cim_matmul_int(
@@ -403,16 +531,34 @@ def cim_matmul_int(
     cfg: CCIMConfig = DEFAULT_CONFIG,
     noise_key: Optional[Array] = None,
     fidelity: str = "fast",
+    *,
+    use_pallas: Optional[bool] = None,
 ) -> Array:
     """Integer GEMM through the macro:  (M,K) @ (K,N) -> (M,N) int64.
 
     K is tiled into acc_len-element chunks; each chunk is one ADC conversion
     producing an 8-bit partial, accumulated digitally at weight 2^11 --
     exactly how a compiler would tile a GEMM onto a bank of these macros.
+
+    fidelity:
+      'fast'            matmul-ized moment-matched path (the default hot path)
+      'fast_broadcast'  legacy elementwise-broadcast fast path (reference)
+      'bit_true'        per-bit-product oracle with the fabricated mismatch
+      'exact'           full-precision integer dot (no macro arithmetic)
+
+    use_pallas: route noise-free 'fast' GEMMs through the Pallas TPU kernel
+    (kernels.ccim_matmul -- identical ideal-analog numerics).  None = auto
+    (only on a TPU backend, with defaults-config numerics).
     """
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2, (K, K2)
+    if fidelity == "fast" and noise_key is None and _kernel_numerics_match(cfg):
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        if use_pallas:
+            from ..kernels.ccim_matmul import ops as _kops
+            return _kops.ccim_matmul_int(x_q, w_q, use_pallas=True)
     C = _pad_to_chunks(K, cfg.acc_len)
     pad = C * cfg.acc_len - K
     xq = jnp.pad(x_q, ((0, 0), (0, pad)))
@@ -421,6 +567,9 @@ def cim_matmul_int(
     wq = wq.reshape(C, cfg.acc_len, N)              # (C,L,N)
 
     if fidelity == "fast":
+        # per-conversion partials are accumulated digitally inside the scan
+        return hybrid_mac_fast_gemm(xq, wq, noise_key, cfg) * cfg.dcim_lsb
+    elif fidelity == "fast_broadcast":
         xc = xq[:, None, :, :]                      # (M,1,C,L)
         wc = jnp.transpose(wq, (2, 0, 1))[None]     # (1,N,C,L)
         out = hybrid_mac_fast(xc, wc, noise_key, cfg)
@@ -450,6 +599,7 @@ def cim_matmul(
     macro: Optional[MacroInstance] = None,
     fidelity: str = "fast",
     per_channel: bool = True,
+    use_pallas: Optional[bool] = None,
 ) -> Array:
     """float (M,K) @ (K,N) through the emulated macro, dequantized."""
     sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)          # per row
@@ -460,7 +610,8 @@ def cim_matmul(
     )
     xq = quantize_smf(x, sx, cfg)
     wq = quantize_smf(w, sw, cfg)
-    y_int = cim_matmul_int(xq, wq, macro, cfg, noise_key, fidelity)
+    y_int = cim_matmul_int(xq, wq, macro, cfg, noise_key, fidelity,
+                           use_pallas=use_pallas)
     return y_int.astype(jnp.float32) * sx * jnp.reshape(sw, (1, -1))
 
 

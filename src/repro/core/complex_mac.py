@@ -36,12 +36,30 @@ def complex_cim_matmul_int(
     cfg: CCIMConfig = DEFAULT_CONFIG,
     noise_key: Optional[Array] = None,
     fidelity: str = "fast",
+    *,
+    use_pallas: Optional[bool] = None,
 ):
-    """Integer complex GEMM; returns (y_re, y_im) int64 at scale 2^11."""
+    """Integer complex GEMM; returns (y_re, y_im) int64 at scale 2^11.
+
+    Noise-free 'fast' GEMMs route to the fused single-pass Pallas kernel
+    (kernels.ccim_complex): one weight-tile residency serves all four real
+    sub-MACs and emits Re/Im together, as in the silicon.  use_pallas=None
+    means auto (TPU backend with defaults-config numerics only); other
+    fidelities / noisy runs fall back to four macro GEMM passes.
+    """
+    if (fidelity == "fast" and noise_key is None
+            and ccim._kernel_numerics_match(cfg)):
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        if use_pallas:
+            from ..kernels.ccim_complex import ccim_complex_matmul_int
+            return ccim_complex_matmul_int(x_re, x_im, w_re, w_im,
+                                           use_pallas=True)
     keys = (None,) * 4
     if noise_key is not None:
         keys = jax.random.split(noise_key, 4)
-    mm = lambda a, b, k: ccim.cim_matmul_int(a, b, macro, cfg, k, fidelity)
+    mm = lambda a, b, k: ccim.cim_matmul_int(a, b, macro, cfg, k, fidelity,
+                                             use_pallas=use_pallas)
     # four real sub-MACs sharing the same weight arrays (no duplication)
     ac = mm(x_re, w_re, keys[0])
     bd = mm(x_im, w_im, keys[1])
@@ -57,6 +75,7 @@ def complex_cim_matmul(
     noise_key: Optional[Array] = None,
     macro: Optional[MacroInstance] = None,
     fidelity: str = "fast",
+    use_pallas: Optional[bool] = None,
 ) -> Array:
     """Float complex (M,K) @ (K,N) through the macro, dequantized.
 
@@ -71,7 +90,8 @@ def complex_cim_matmul(
                         keepdims=True, cfg=cfg)
     q = lambda v, s: ccim.quantize_smf(v, s, cfg)
     yr, yi = complex_cim_matmul_int(
-        q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw), macro, cfg, noise_key, fidelity
+        q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw), macro, cfg, noise_key,
+        fidelity, use_pallas=use_pallas,
     )
     scale = sx * jnp.reshape(sw, (1, -1))
     return (yr * scale + 1j * (yi * scale)).astype(jnp.complex64)

@@ -22,22 +22,28 @@ from .ccim import CCIMConfig, DEFAULT_CONFIG, cim_matmul
 Array = jax.Array
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def cim_linear(x: Array, w: Array, noise_key: Optional[Array],
-               cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast") -> Array:
-    """(..., K) @ (K, N) through the macro, STE gradients."""
+               cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
+               use_pallas: Optional[bool] = None) -> Array:
+    """(..., K) @ (K, N) through the macro, STE gradients.
+
+    use_pallas routes noise-free 'fast' forwards through the Pallas TPU
+    kernel (None = auto: only on a TPU backend).
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = cim_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), cfg,
-                   noise_key=noise_key, fidelity=fidelity)
+                   noise_key=noise_key, fidelity=fidelity,
+                   use_pallas=use_pallas)
     return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
-def _fwd(x, w, noise_key, cfg, fidelity):
-    return cim_linear(x, w, noise_key, cfg, fidelity), (x, w)
+def _fwd(x, w, noise_key, cfg, fidelity, use_pallas):
+    return cim_linear(x, w, noise_key, cfg, fidelity, use_pallas), (x, w)
 
 
-def _bwd(cfg, fidelity, res, g):
+def _bwd(cfg, fidelity, use_pallas, res, g):
     x, w = res
     gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
     gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)

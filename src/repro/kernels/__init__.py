@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the macro's compute hot-spots, each as
 # <name>/{kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 # ref.py (pure-jnp oracle)}; validated in interpret mode on CPU.
-from . import ccim_matmul, int8_matmul  # noqa: F401
+# ccim_complex is the fused single-pass complex GEMM (one co-located
+# weight residency -> both Re and Im output tiles, see DESIGN.md §5).
+from . import ccim_complex, ccim_matmul, int8_matmul  # noqa: F401

@@ -1,0 +1,3 @@
+from .kernel import ccim_complex_matmul_pallas  # noqa: F401
+from .ops import ccim_complex_matmul, ccim_complex_matmul_int  # noqa: F401
+from .ref import ccim_complex_matmul_ref  # noqa: F401

@@ -1,0 +1,141 @@
+"""Fused single-pass complex hybrid-CIM GEMM Pallas kernel.
+
+The silicon's headline dataflow (see DESIGN.md §5): Re and Im of each
+weight are co-located in one 6T array, so ONE weight residency serves all
+four real sub-MACs of (a+bi)(c+di) and the Re/Im outputs are produced with
+a single conversion pass.  The kernel mirrors that: per (bm, bn, bk) grid
+step it loads the w_re / w_im tiles ONCE, decomposes their MSB bit-planes
+ONCE, and emits BOTH the Re and the Im output tiles -- four per-chunk
+hybrid y8 streams (ac, bd, ad, bc) combined digitally as
+
+    y_re += 2^11 * sum_c (y8_ac - y8_bd)
+    y_im += 2^11 * sum_c (y8_ad + y8_bc)
+
+Each sub-MAC uses the same ideal-analog macro arithmetic as
+kernels.ccim_matmul (exact MXU dot + 3 MSB bit-plane dots + 7b mid-tread
+ADC per 16-element chunk), so the result is bit-identical to four
+independent ccim_matmul passes -- but with one weight fetch instead of
+four and one kernel launch instead of four.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACC_LEN = 16
+DCIM_LSB = 2048  # 2^11
+ADC_HALF = 64    # 7-bit bipolar
+
+
+def _chunk_dot(x, w):
+    """(C, bm, L) x (C, L, bn) -> (C, bm, bn) int32 batched MXU dot."""
+    return jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _msb_planes(v):
+    """int32 tile -> (value, signed bit-6 plane, signed bit-5 plane)."""
+    s = jnp.where(v < 0, -1, 1)
+    m = jnp.abs(v)
+    return v, s * ((m >> 6) & 1), s * ((m >> 5) & 1)
+
+
+def _y8_chunks(x, x6, x5, w, w6, w5):
+    """Per-chunk hybrid macro output (C, bm, bn) for one real sub-MAC."""
+    exact = _chunk_dot(x, w)
+    dcim = 2 * _chunk_dot(x6, w6) + _chunk_dot(x6, w5) + _chunk_dot(x5, w6)
+    acim = exact - dcim * DCIM_LSB
+    code = jnp.clip(
+        jnp.floor_divide(acim + DCIM_LSB // 2, DCIM_LSB), -ADC_HALF, ADC_HALF - 1
+    )
+    return dcim + code
+
+
+def _ccim_complex_kernel(
+    xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref, acc_re, acc_im,
+    *, bk: int, n_k: int,
+):
+    """One (bm, bn) Re tile AND one Im tile; grid axis 2 walks K in bk steps."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_re[...] = jnp.zeros_like(acc_re)
+        acc_im[...] = jnp.zeros_like(acc_im)
+
+    # ONE residency of the co-located (Re, Im) weight tile + ONE bit-plane
+    # decomposition, shared by all four sub-MACs below.
+    wr, wr6, wr5 = _msb_planes(wr_ref[...].astype(jnp.int32))   # (bk, bn)
+    wi, wi6, wi5 = _msb_planes(wi_ref[...].astype(jnp.int32))
+    xr, xr6, xr5 = _msb_planes(xr_ref[...].astype(jnp.int32))   # (bm, bk)
+    xi, xi6, xi5 = _msb_planes(xi_ref[...].astype(jnp.int32))
+
+    bm, bn = xr.shape[0], wr.shape[1]
+    c = bk // ACC_LEN
+    to_xc = lambda v: v.reshape(bm, c, ACC_LEN).swapaxes(0, 1)  # (C, bm, L)
+    to_wc = lambda v: v.reshape(c, ACC_LEN, bn)                 # (C, L, bn)
+    xrc = tuple(map(to_xc, (xr, xr6, xr5)))
+    xic = tuple(map(to_xc, (xi, xi6, xi5)))
+    wrc = tuple(map(to_wc, (wr, wr6, wr5)))
+    wic = tuple(map(to_wc, (wi, wi6, wi5)))
+
+    y_ac = _y8_chunks(*xrc, *wrc)
+    y_bd = _y8_chunks(*xic, *wic)
+    y_ad = _y8_chunks(*xrc, *wic)
+    y_bc = _y8_chunks(*xic, *wrc)
+    acc_re[...] += jnp.sum(y_ac - y_bd, axis=0) * DCIM_LSB
+    acc_im[...] += jnp.sum(y_ad + y_bc, axis=0) * DCIM_LSB
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        or_ref[...] = acc_re[...]
+        oi_ref[...] = acc_im[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def ccim_complex_matmul_pallas(
+    x_re: jax.Array,          # (M, K) int8, values in [-127, 127]
+    x_im: jax.Array,          # (M, K) int8
+    w_re: jax.Array,          # (K, N) int8 -- ONE co-located copy
+    w_im: jax.Array,          # (K, N) int8
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused complex CIM GEMM -> (y_re, y_im), each (M, N) int32 at x2^11."""
+    M, K = x_re.shape
+    K2, N = w_re.shape
+    assert K == K2
+    assert x_im.shape == (M, K) and w_im.shape == (K, N)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk % ACC_LEN == 0
+    n_k = K // bk
+
+    kernel = functools.partial(_ccim_complex_kernel, bk=bk, n_k=n_k)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[x_spec, x_spec, w_spec, w_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int32),
+            jax.ShapeDtypeStruct((M, N), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_re, x_im, w_re, w_im)

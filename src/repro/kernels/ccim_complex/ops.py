@@ -1,0 +1,81 @@
+"""Jitted public wrapper for the fused complex hybrid-CIM GEMM kernel.
+
+Handles: shared-full-scale complex SMF quantization, K padding to the
+accumulate length, (bm,bn,bk) block selection with zero-padding to the
+MXU-preferred blocks, CPU fallback (jnp oracle / interpret mode), dequant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..ccim_matmul.ops import _pad_to, pick_gemm_blocks
+from .kernel import ACC_LEN, ccim_complex_matmul_pallas
+from .ref import ccim_complex_matmul_ref
+
+
+def ccim_complex_matmul_int(
+    x_re: jax.Array, x_im: jax.Array,        # (M, K) ints in [-127, 127]
+    w_re: jax.Array, w_im: jax.Array,        # (K, N) ints -- one co-located copy
+    *, use_pallas: bool | None = None, interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Integer complex GEMM -> (y_re, y_im) int32 at scale 2^11."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    M, K = x_re.shape
+    _, N = w_re.shape
+    Kp = _pad_to(K, ACC_LEN)
+    if Kp != K:
+        pk = Kp - K
+        x_re = jnp.pad(x_re, ((0, 0), (0, pk)))
+        x_im = jnp.pad(x_im, ((0, 0), (0, pk)))
+        w_re = jnp.pad(w_re, ((0, pk), (0, 0)))
+        w_im = jnp.pad(w_im, ((0, pk), (0, 0)))
+    if not use_pallas:
+        return ccim_complex_matmul_ref(x_re, x_im, w_re, w_im)
+    bm, bn, bk = pick_gemm_blocks(M, N, Kp)
+    Mp, Np, Kpp = _pad_to(M, bm), _pad_to(N, bn), _pad_to(Kp, bk)
+    if (Mp, Np, Kpp) != (M, N, Kp):
+        x_re = jnp.pad(x_re, ((0, Mp - M), (0, Kpp - Kp)))
+        x_im = jnp.pad(x_im, ((0, Mp - M), (0, Kpp - Kp)))
+        w_re = jnp.pad(w_re, ((0, Kpp - Kp), (0, Np - N)))
+        w_im = jnp.pad(w_im, ((0, Kpp - Kp), (0, Np - N)))
+    y_re, y_im = ccim_complex_matmul_pallas(
+        x_re.astype(jnp.int8), x_im.astype(jnp.int8),
+        w_re.astype(jnp.int8), w_im.astype(jnp.int8),
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y_re[:M, :N], y_im[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ccim_complex_matmul(
+    x: jax.Array, w: jax.Array, *, use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Complex float (M,K) @ (K,N) through the fused macro numerics.
+
+    Re and Im of each operand share one scale (they share the array's
+    full-scale in silicon, where both live on the same bitlines).
+    """
+    xr, xi = jnp.real(x), jnp.imag(x)
+    wr, wi = jnp.real(w), jnp.imag(w)
+    amax_x = jnp.maximum(
+        jnp.max(jnp.maximum(jnp.abs(xr), jnp.abs(xi)), axis=-1, keepdims=True),
+        1e-12)
+    amax_w = jnp.maximum(
+        jnp.max(jnp.maximum(jnp.abs(wr), jnp.abs(wi)), axis=0, keepdims=True),
+        1e-12)
+    sx, sw = amax_x / 127.0, amax_w / 127.0
+    q = lambda v, s: jnp.clip(jnp.round(v / s), -127, 127).astype(jnp.int32)
+    y_re, y_im = ccim_complex_matmul_int(
+        q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw),
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    scale = sx * sw
+    return (y_re * scale + 1j * (y_im * scale)).astype(jnp.complex64)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused complex CIM kernel: the 4-call reference.
+
+Four independent ideal-analog hybrid GEMMs (one per real sub-MAC of
+(a+bi)(c+di)) combined digitally.  Built on the ccim_matmul jnp oracle --
+NOT on the fused kernel module -- so the parity test compares two
+independent implementations of the same dataflow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..ccim_matmul.ref import ccim_matmul_ref
+
+
+def ccim_complex_matmul_ref(
+    x_re: jnp.ndarray, x_im: jnp.ndarray,
+    w_re: jnp.ndarray, w_im: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """4-pass reference: (M,K)x2 @ (K,N)x2 -> (y_re, y_im) int32 at x2^11."""
+    ac = ccim_matmul_ref(x_re, w_re)
+    bd = ccim_matmul_ref(x_im, w_im)
+    ad = ccim_matmul_ref(x_re, w_im)
+    bc = ccim_matmul_ref(x_im, w_re)
+    return ac - bd, ad + bc

@@ -19,10 +19,36 @@ def _pad_to(v: int, m: int) -> int:
 
 
 def _pick_block(dim: int, preferred: int) -> int:
-    b = min(preferred, dim)
-    while dim % b:
+    """Block size for ``dim``; the caller pads ``dim`` up to a multiple.
+
+    Dims at or above the MXU-preferred block always get the full block (the
+    ragged remainder is padded with zeros -- numerically free: all-zero
+    chunks produce y8 = 0) instead of degrading to tiny non-lane-aligned
+    blocks (the old divisor search turned e.g. M=160 into bm=32).  Smaller
+    dims round up to the next power of two.
+    """
+    if dim >= preferred:
+        return preferred
+    return 1 << max(dim - 1, 0).bit_length()
+
+
+def _pick_k_block(c: int, preferred: int = 32) -> int:
+    """Chunk-count block for the K axis: largest power-of-two block whose
+    zero-padding waste stays under 25%.  Unlike M/N, K has no lane-
+    alignment constraint beyond the ACC_LEN chunking, so trading block
+    size against padded-out MACs is free (e.g. C=33 takes an 8-chunk
+    block over padding 33 -> 64 with a 32-chunk one)."""
+    b = _pick_block(c, preferred)
+    while b > 1 and (-c % b) * 4 > c:
         b //= 2
-    return max(b, 1)
+    return b
+
+
+def pick_gemm_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M, K) x (K, N) macro GEMM; K in ACC_LEN chunks."""
+    bm, bn = _pick_block(M, 128), _pick_block(N, 128)
+    bk = _pick_k_block(_pad_to(K, ACC_LEN) // ACC_LEN) * ACC_LEN
+    return bm, bn, bk
 
 
 def ccim_matmul_int(
@@ -43,12 +69,11 @@ def ccim_matmul_int(
         w_q = jnp.pad(w_q, ((0, Kp - K), (0, 0)))
     if not use_pallas:
         return ccim_matmul_ref(x_q, w_q)
-    bm, bn = _pick_block(M, 128), _pick_block(N, 128)
-    bk = _pick_block(Kp // ACC_LEN, 32) * ACC_LEN
-    Mp, Np = _pad_to(M, bm), _pad_to(N, bn)
-    if (Mp, Np) != (M, N):
-        x_q = jnp.pad(x_q, ((0, Mp - M), (0, 0)))
-        w_q = jnp.pad(w_q, ((0, 0), (0, Np - N)))
+    bm, bn, bk = pick_gemm_blocks(M, N, Kp)
+    Mp, Np, Kpp = _pad_to(M, bm), _pad_to(N, bn), _pad_to(Kp, bk)
+    if (Mp, Np, Kpp) != (M, N, Kp):
+        x_q = jnp.pad(x_q, ((0, Mp - M), (0, Kpp - Kp)))
+        w_q = jnp.pad(w_q, ((0, Kpp - Kp), (0, Np - N)))
     y = ccim_matmul_pallas(
         x_q.astype(jnp.int8), w_q.astype(jnp.int8),
         bm=bm, bn=bn, bk=bk, interpret=interpret,

@@ -10,15 +10,9 @@ from .kernel import int8_matmul_pallas
 from .ref import int8_matmul_ref
 
 
-def _pad_to(v: int, m: int) -> int:
-    return (v + m - 1) // m * m
-
-
-def _pick_block(dim: int, preferred: int) -> int:
-    b = min(preferred, dim)
-    while dim % b:
-        b //= 2
-    return max(b, 1)
+# block policy shared with the CIM GEMM: pad up to MXU-preferred blocks
+# instead of shrinking to non-lane-aligned divisors (see DESIGN.md §2)
+from ..ccim_matmul.ops import _pad_to, _pick_block, _pick_k_block
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -41,8 +35,17 @@ def int8_matmul(
     M, K = xq.shape
     _, N = wq.shape
     bm, bn = _pick_block(M, 128), _pick_block(N, 128)
-    bk = _pick_block(K, 512)
-    return int8_matmul_pallas(
+    bk = _pick_k_block(K, 512)
+    Mp, Np, Kp = _pad_to(M, bm), _pad_to(N, bn), _pad_to(K, bk)
+    if (Mp, Np, Kp) != (M, N, K):
+        # zero products contribute nothing to the int32 accumulator; the
+        # padded rows/cols are sliced away before dequant scales matter
+        xq = jnp.pad(xq, ((0, Mp - M), (0, Kp - K)))
+        wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+        sx = jnp.pad(sx, ((0, Mp - M), (0, 0)), constant_values=1.0)
+        sw = jnp.pad(sw, ((0, 0), (0, Np - N)), constant_values=1.0)
+    y = int8_matmul_pallas(
         xq, wq, sx.astype(jnp.float32), sw.astype(jnp.float32),
         bm=bm, bn=bn, bk=bk, interpret=interpret,
     )
+    return y[:M, :N]

@@ -1,0 +1,118 @@
+"""Parity tests for the single-pass complex kernel and the matmul-ized
+fast path: both must be bit-identical to the implementations they replace
+(fused kernel vs 4-call reference; batched-matmul fast GEMM vs the legacy
+elementwise-broadcast formulation), across ragged shapes and with/without
+the injected noise draw."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ccim as core_ccim
+from repro.core.complex_mac import complex_cim_matmul, complex_cim_matmul_int
+from repro.kernels.ccim_complex import (ccim_complex_matmul,
+                                        ccim_complex_matmul_int,
+                                        ccim_complex_matmul_pallas,
+                                        ccim_complex_matmul_ref)
+
+
+def _rand_q(key, shape, dtype=jnp.int32):
+    return jax.random.randint(key, shape, -127, 128).clip(-127, 127).astype(dtype)
+
+
+def _complex_operands(seed, m, k, n):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return (_rand_q(ks[0], (m, k)), _rand_q(ks[1], (m, k)),
+            _rand_q(ks[2], (k, n)), _rand_q(ks[3], (k, n)))
+
+
+SHAPES = [
+    (8, 32, 16, dict(bm=8, bn=16, bk=32)),
+    (16, 64, 8, dict(bm=8, bn=8, bk=32)),
+    (32, 128, 32, dict(bm=16, bn=32, bk=64)),
+    (8, 256, 128, dict(bm=8, bn=128, bk=128)),
+]
+
+
+@pytest.mark.parametrize("m,k,n,blocks", SHAPES)
+def test_fused_complex_kernel_vs_4call_ref(m, k, n, blocks):
+    xr, xi, wr, wi = _complex_operands(m * k + n, m, k, n)
+    i8 = lambda v: v.astype(jnp.int8)
+    yr, yi = ccim_complex_matmul_pallas(i8(xr), i8(xi), i8(wr), i8(wi),
+                                        interpret=True, **blocks)
+    rr, ri = ccim_complex_matmul_ref(xr, xi, wr, wi)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(ri))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (5, 37, 11),     # everything ragged, K odd
+    (16, 80, 32),    # K a multiple of acc_len but not of bk
+    (96, 96, 96),    # dims that used to degrade _pick_block to bm=32
+    (3, 16, 3),      # single chunk
+])
+def test_fused_complex_ops_wrapper_ragged(m, k, n):
+    """ops.py padding must keep the fused kernel bit-identical to the
+    4-call core reference on shapes the block picker has to pad."""
+    xr, xi, wr, wi = _complex_operands(1000 + m * k + n, m, k, n)
+    yr, yi = ccim_complex_matmul_int(xr, xi, wr, wi,
+                                     use_pallas=True, interpret=True)
+    rr, ri = complex_cim_matmul_int(xr, xi, wr, wi, None,
+                                    fidelity="fast", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(ri))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 64, 8),      # aligned
+    (5, 37, 11),     # odd K, ragged M/N
+    (16, 80, 32),    # K not divisible by the scan block's acc_len span
+    (7, 129, 9),     # K % acc_len == 1
+])
+@pytest.mark.parametrize("with_noise", [False, True])
+def test_fast_matmulized_vs_broadcast_bit_identical(m, k, n, with_noise):
+    ks = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n), 3)
+    xq = _rand_q(ks[0], (m, k))
+    wq = _rand_q(ks[1], (k, n))
+    nk = ks[2] if with_noise else None
+    new = core_ccim.cim_matmul_int(xq, wq, None, noise_key=nk,
+                                   fidelity="fast", use_pallas=False)
+    old = core_ccim.cim_matmul_int(xq, wq, None, noise_key=nk,
+                                   fidelity="fast_broadcast")
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+@pytest.mark.parametrize("with_noise", [False, True])
+def test_complex_4call_matmulized_vs_broadcast(with_noise):
+    xr, xi, wr, wi = _complex_operands(77, 8, 48, 8)
+    nk = jax.random.PRNGKey(5) if with_noise else None
+    new = complex_cim_matmul_int(xr, xi, wr, wi, None, noise_key=nk,
+                                 fidelity="fast", use_pallas=False)
+    old = complex_cim_matmul_int(xr, xi, wr, wi, None, noise_key=nk,
+                                 fidelity="fast_broadcast")
+    for a, b in zip(new, old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_float_wrapper_accuracy():
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(11), 4)
+    x = (jax.random.normal(k1, (16, 128))
+         + 1j * jax.random.normal(k2, (16, 128))).astype(jnp.complex64)
+    w = (jax.random.normal(k3, (128, 16))
+         + 1j * jax.random.normal(k4, (128, 16))).astype(jnp.complex64)
+    y = ccim_complex_matmul(x, w, use_pallas=True, interpret=True)
+    ref = x @ w
+    fs = float(jnp.abs(ref).max())
+    assert float(jnp.abs(y - ref).max()) / fs < 0.2
+
+
+def test_complex_dispatch_prefers_fused_kernel():
+    """complex_cim_matmul_int(use_pallas=True) must match the fused ops
+    wrapper exactly (it routes there for noise-free fast GEMMs)."""
+    xr, xi, wr, wi = _complex_operands(23, 8, 64, 8)
+    via_dispatch = complex_cim_matmul_int(xr, xi, wr, wi, None,
+                                          fidelity="fast", use_pallas=True)
+    direct = ccim_complex_matmul_int(xr, xi, wr, wi,
+                                     use_pallas=True, interpret=True)
+    for a, b in zip(via_dispatch, direct):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

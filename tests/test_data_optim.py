@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # [test] extra absent: fixed-grid fallback
+    from _prop_fallback import given, settings, st
 
 from repro.data import DataConfig, Prefetcher, batch_at
 from repro.optim import (OptConfig, adamw_update, global_norm,

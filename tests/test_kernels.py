@@ -84,6 +84,35 @@ def test_kernel_nonaligned_padding():
     assert float(jnp.abs(y - ref).max()) < 0.05 * fs
 
 
+def test_pick_block_prefers_padding_over_tiny_blocks():
+    """Dims >= the preferred block keep it (ragged part is padded) instead
+    of degrading to small non-MXU-aligned blocks; small dims round up to
+    the next power of two."""
+    from repro.kernels.ccim_matmul.ops import _pick_block
+    assert _pick_block(96, 128) == 128   # used to shrink
+    assert _pick_block(160, 128) == 128  # used to degrade to 32
+    assert _pick_block(128, 128) == 128
+    assert _pick_block(257, 128) == 128
+    assert _pick_block(8, 128) == 8
+    assert _pick_block(5, 128) == 8
+    assert _pick_block(1, 128) == 1
+    assert _pick_block(33, 32) == 32
+
+
+@pytest.mark.parametrize("m,k,n", [(96, 96, 96), (160, 528, 40)])
+def test_kernel_padded_blocks_match_ref(m, k, n):
+    """Shapes that now pad up to the preferred block must stay exact."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + k + n))
+    xq = _rand_q(k1, (m, k), jnp.int32)
+    wq = _rand_q(k2, (k, n), jnp.int32)
+    from repro.kernels.ccim_matmul.ops import ccim_matmul_int as kernel_int
+    out = kernel_int(xq, wq, use_pallas=True, interpret=True)
+    kp = (k + 15) // 16 * 16
+    ref = ccim_matmul_ref(jnp.pad(xq, ((0, 0), (0, kp - k))),
+                          jnp.pad(wq, ((0, kp - k), (0, 0))))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_int8_wrapper_dtypes(dtype):
     k1, k2 = jax.random.split(jax.random.PRNGKey(17))
