@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import emit, record, time_us, write_bench_json
-from repro.core import DEFAULT_CONFIG, cim_matmul, fabricate
+from repro.core import DEFAULT_CONFIG, cim_matmul, fabricate, pack_cim_weights
 from repro.core.ccim import cim_matmul_int
 from repro.core.complex_mac import complex_cim_matmul_int
 from repro.kernels.ccim_matmul import ccim_matmul_ref
@@ -72,6 +72,26 @@ def run(seed: int = 0):
     record("fast_gemm_broadcast", (M2, K2, N2), us_bcast)
     record("fast_gemm_matmulized", (M2, K2, N2), us_mm, us_bcast / us_mm,
            "vs broadcast fast path (bit-identical)")
+
+    # ---- prepacked weights: decode-shaped float GEMM (M small) -----------
+    # serving decode re-runs the SAME weight matrix every token; packing
+    # amortizes quantize+decompose, leaving activation-only work per call
+    Md, Kd, Nd = 4, 1024, 256
+    xd = jax.random.normal(k1, (Md, Kd))
+    wd = jax.random.normal(k2, (Kd, Nd))
+    packed = jax.jit(lambda v: pack_cim_weights(v, cfg))(wd)
+    f_unp = jax.jit(lambda a, b: cim_matmul(a, b, cfg, use_pallas=False))
+    f_pk = jax.jit(lambda a, p: cim_matmul(a, p, cfg, use_pallas=False))
+    us_unp = time_us(f_unp, xd, wd, iters=8, warmup=2, reduce="min")
+    us_pk = time_us(f_pk, xd, packed, iters=8, warmup=2, reduce="min")
+    assert (np.asarray(f_unp(xd, wd)) == np.asarray(f_pk(xd, packed))).all()
+    emit("kern.decode_gemm_unpacked", us_unp,
+         f"{Md}x{Kd}x{Nd} per-call weight conditioning (legacy)")
+    emit("kern.decode_gemm_prepacked", us_pk,
+         f"bit-identical; {us_unp/us_pk:.1f}x faster with packed weights")
+    record("decode_gemm_unpacked", (Md, Kd, Nd), us_unp)
+    record("decode_gemm_prepacked", (Md, Kd, Nd), us_pk, us_unp / us_pk,
+           "vs per-call weight conditioning (bit-identical)")
 
     # ---- complex GEMM: matmul-ized 4-pass (new) vs broadcast 4-pass ------
     kk = jax.random.split(key, 4)

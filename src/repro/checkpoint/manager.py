@@ -6,6 +6,11 @@ Atomicity: write into ``<dir>/tmp.<step>`` then os.rename -- a crashed save
 never corrupts the latest checkpoint (restart-safety on node failure).
 Loading device_puts each leaf to the *target* sharding, so a checkpoint
 written on a 16x16 mesh restores onto 2x16x16 (or 1 CPU) unchanged.
+
+Registered-dataclass pytrees (e.g. core.engine.PackedCimWeights) round-trip
+too: their GetAttrKey/SequenceKey path entries key the npz just like dict
+keys, so a deployment can checkpoint PREPACKED params and pay the PTQ
+weight-conditioning cost once per deployment instead of once per process.
 """
 from __future__ import annotations
 
@@ -19,14 +24,26 @@ import jax
 import numpy as np
 
 
+def _path_part(p) -> str:
+    """One path entry -> npz key segment (DictKey.key, GetAttrKey.name,
+    SequenceKey.idx / FlattenedIndexKey.key all normalise to their value)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _path_key(path) -> str:
+    return "/".join(_path_part(p) for p in path)
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":  # npz round-trip safe staging
             arr = arr.astype(np.float32)
-        flat[key] = arr
+        flat[_path_key(path)] = arr
     return flat
 
 
@@ -82,9 +99,9 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
                   else [None] * len(leaves_p))
     out = []
     for (p, leaf), shd in zip(leaves_p, flat_shard):
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
-        arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = data[_path_key(p)]
+        assert arr.shape == tuple(leaf.shape), \
+            (_path_key(p), arr.shape, leaf.shape)
         arr = jax.numpy.asarray(arr).astype(leaf.dtype)  # handles bf16 staging
         out.append(jax.device_put(arr, shd) if shd is not None else arr)
     return jax.tree_util.tree_unflatten(tdef, out)

@@ -24,5 +24,15 @@ from .complex_mac import (  # noqa: F401
     complex_cim_matmul_int,
     complex_mac_reference,
 )
-from .qat import cim_linear, maybe_cim_linear  # noqa: F401
+from .engine import (  # noqa: F401
+    CimEngine,
+    PackedCimWeights,
+    PackedComplexCimWeights,
+    pack_cim_weights,
+    pack_complex_cim_weights,
+    pack_quantized_cim_weights,
+    packed_cim_matmul,
+    packed_cim_matmul_int,
+)
+from .qat import cim_linear, cim_linear_packed, maybe_cim_linear  # noqa: F401
 from . import baselines, costmodel  # noqa: F401

@@ -413,6 +413,49 @@ def hybrid_mac_fast(
 _CHUNK_BLOCK = 16  # ADC conversions processed per scan step (cache-sized)
 
 
+def _dcim_by_j(cfg: CCIMConfig) -> dict:
+    """dcim_products grouped by the x bit-plane index j (insertion order)."""
+    by_j: dict = {}
+    for j, k in cfg.dcim_products:
+        by_j.setdefault(j, []).append(k)
+    return by_j
+
+
+def fold_dcim_planes(wq: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> list:
+    """Folded signed DCIM planes of integer weights, one per distinct j.
+
+    Plane_j = sign(w) * sum_{k in ks(j)} (2^(j+k)/dcim_lsb) * bit_k(|w|):
+    the k-planes of w fold into a single weighted plane per x bit-plane
+    (dcim = x6 . (2*w6 + w5) + x5 . w6 for the top-3 split; values fit
+    int8).  The ONE definition of the fold -- the fast GEMM, the Pallas
+    prepacked kernels and engine packing all consume it.
+    """
+    sw, mw = split_sign_mag(wq)
+    planes = []
+    for j, ks in _dcim_by_j(cfg).items():
+        wsum = jnp.zeros_like(mw)
+        for k in ks:
+            wsum = wsum + ((mw >> k) & 1) * ((1 << (j + k)) // cfg.dcim_lsb)
+        planes.append(sw * wsum)
+    return planes
+
+
+def fast_gemm_weight_ops(
+    wq: Array,                       # (C, L, N) ints in [-127, 127]
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> Tuple[Array, Tuple[Array, ...]]:
+    """Weight-side operand prep for the fast GEMM (the weight-stationary
+    half of the dataflow -- computable ONCE per weight matrix).
+
+    Returns (wf, w_planes): the float copy of the chunked weights and the
+    folded DCIM planes as float32.  Planes carry the weight sign; their
+    abs() is the magnitude plane the noisy path needs.
+    """
+    wf = wq.astype(jnp.float32)
+    w_pl = tuple(p.astype(jnp.float32) for p in fold_dcim_planes(wq, cfg))
+    return wf, w_pl
+
+
 def hybrid_mac_fast_gemm(
     xq: Array,                       # (M, C, L) ints in [-127, 127]
     wq: Array,                       # (C, L, N) ints in [-127, 127]
@@ -423,6 +466,22 @@ def hybrid_mac_fast_gemm(
 
     Bit-identical (including the noise draw) to summing hybrid_mac_fast's
     y8 over the (M,1,C,L) x (1,N,C,L) broadcast of the same operands.
+    """
+    wf, w_pl = fast_gemm_weight_ops(wq, cfg)
+    return hybrid_mac_fast_gemm_prepacked(xq, wf, w_pl, noise_key, cfg)
+
+
+def hybrid_mac_fast_gemm_prepacked(
+    xq: Array,                       # (M, C, L) ints in [-127, 127]
+    wf: Array,                       # (C, L, N) float32 weight copy
+    w_pl: Tuple[Array, ...],         # folded signed DCIM planes, (C, L, N) each
+    noise_key: Optional[Array],
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> Array:
+    """Fast-path GEMM on prepacked weight operands (see fast_gemm_weight_ops).
+
+    Only activation-side quantities are derived here -- the weight side
+    streams from storage exactly as bit-cells do in the silicon macro.
     The chunk axis is processed _CHUNK_BLOCK conversions at a time inside a
     scan, so the (Cb, M, N) partials stay cache-resident instead of
     streaming O(C*M*N) intermediates through memory; noise-free runs need
@@ -431,35 +490,24 @@ def hybrid_mac_fast_gemm(
     """
     M, C, L = xq.shape
     sx, mx = split_sign_mag(xq)
-    sw, mw = split_sign_mag(wq)
     xT = lambda v: jnp.transpose(v, (1, 0, 2))              # -> (C, M, L)
     xf = xT(xq).astype(jnp.float32)
-    wf = wq.astype(jnp.float32)
     sxf, mxT = xT(sx).astype(jnp.float32), xT(mx)
-    swf = sw.astype(jnp.float32)
 
-    # one x bit-plane per distinct j; the k-planes of w fold into a single
-    # weighted plane per j (2 GEMMs instead of 3 for the top-3 split:
-    # dcim = x6 . (2*w6 + w5) + x5 . w6)
-    by_j: dict = {}
-    for j, k in cfg.dcim_products:
-        by_j.setdefault(j, []).append(k)
-    x_pl, xm_pl, w_pl, wm_pl = [], [], [], []
-    for j, ks in by_j.items():
+    # one x bit-plane per distinct j, pairing with the folded w planes
+    x_pl, xm_pl = [], []
+    for j in _dcim_by_j(cfg):
         xbit = ((mxT >> j) & 1).astype(jnp.float32)
         x_pl.append(sxf * xbit)
         xm_pl.append(xbit)
-        wsum = jnp.zeros_like(wf)
-        for k in ks:
-            wgt = (1 << (j + k)) // cfg.dcim_lsb
-            wsum = wsum + wgt * ((mw >> k) & 1).astype(jnp.float32)
-        w_pl.append(swf * wsum)
-        wm_pl.append(wsum)
 
     noisy = noise_key is not None
     ops = [xf, wf, tuple(x_pl), tuple(w_pl)]
     if noisy:
-        ops += [jnp.abs(xf), jnp.abs(wf), tuple(xm_pl), tuple(wm_pl)]
+        # |folded signed plane| == the magnitude plane (the fold weights
+        # are non-negative), so the mags need no separate storage
+        ops += [jnp.abs(xf), jnp.abs(wf), tuple(xm_pl),
+                tuple(jnp.abs(p) for p in w_pl)]
         # drawn in the broadcast path's (M, N, C) layout, then re-laid-out,
         # so noisy results stay bit-identical to hybrid_mac_fast
         ops.append(jnp.transpose(
@@ -549,7 +597,15 @@ def cim_matmul_int(
     use_pallas: route noise-free 'fast' GEMMs through the Pallas TPU kernel
     (kernels.ccim_matmul -- identical ideal-analog numerics).  None = auto
     (only on a TPU backend, with defaults-config numerics).
+
+    ``w_q`` may be a ``engine.PackedCimWeights`` (weight-stationary
+    execution: quantize/decompose once, serve many) -- bit-identical to
+    passing the raw integer weights.
     """
+    from .engine import PackedCimWeights, packed_cim_matmul_int
+    if isinstance(w_q, PackedCimWeights):
+        return packed_cim_matmul_int(x_q, w_q, macro, cfg, noise_key,
+                                     fidelity, use_pallas=use_pallas)
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2, (K, K2)
@@ -601,7 +657,15 @@ def cim_matmul(
     per_channel: bool = True,
     use_pallas: Optional[bool] = None,
 ) -> Array:
-    """float (M,K) @ (K,N) through the emulated macro, dequantized."""
+    """float (M,K) @ (K,N) through the emulated macro, dequantized.
+
+    ``w`` may be a ``engine.PackedCimWeights``; activation quantization
+    then runs per call while the weight conditioning is served prepacked.
+    """
+    from .engine import PackedCimWeights, packed_cim_matmul
+    if isinstance(w, PackedCimWeights):
+        return packed_cim_matmul(x, w, cfg, noise_key=noise_key, macro=macro,
+                                 fidelity=fidelity, use_pallas=use_pallas)
     sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)          # per row
     sw = (
         smf_scale(w, axis=0, keepdims=True, cfg=cfg)

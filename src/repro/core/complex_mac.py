@@ -25,14 +25,15 @@ import jax.numpy as jnp
 
 from . import ccim
 from .ccim import CCIMConfig, DEFAULT_CONFIG, MacroInstance
+from .engine import (PackedComplexCimWeights, pack_complex_cim_weights)
 
 Array = jax.Array
 
 
 def complex_cim_matmul_int(
     x_re: Array, x_im: Array,            # (M, K) ints in [-127,127]
-    w_re: Array, w_im: Array,            # (K, N) ints -- ONE co-located copy
-    macro: Optional[MacroInstance],
+    w_re, w_im=None,                     # (K, N) ints -- ONE co-located copy
+    macro: Optional[MacroInstance] = None,
     cfg: CCIMConfig = DEFAULT_CONFIG,
     noise_key: Optional[Array] = None,
     fidelity: str = "fast",
@@ -46,18 +47,38 @@ def complex_cim_matmul_int(
     sub-MACs and emits Re/Im together, as in the silicon.  use_pallas=None
     means auto (TPU backend with defaults-config numerics only); other
     fidelities / noisy runs fall back to four macro GEMM passes.
+
+    ``w_re`` may be a ``engine.PackedComplexCimWeights`` (then ``w_im``
+    must be omitted): the co-located pair is packed once and served from
+    storage -- bit-identical to passing the raw integer pair.
     """
+    packed = w_re if isinstance(w_re, PackedComplexCimWeights) else None
+    if packed is not None:
+        assert w_im is None, "packed operand carries both Re and Im"
+    else:
+        assert w_im is not None
     if (fidelity == "fast" and noise_key is None
             and ccim._kernel_numerics_match(cfg)):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         if use_pallas:
+            if packed is not None:
+                from ..kernels.ccim_complex import (
+                    ccim_complex_matmul_int_prepacked)
+                re, im = packed.re, packed.im
+                return ccim_complex_matmul_int_prepacked(
+                    x_re, x_im, re.pallas_w, im.pallas_w,
+                    re.pallas_planes[0], re.pallas_planes[1],
+                    im.pallas_planes[0], im.pallas_planes[1],
+                    k_dim=re.k_dim, n_dim=re.n_dim, use_pallas=True)
             from ..kernels.ccim_complex import ccim_complex_matmul_int
             return ccim_complex_matmul_int(x_re, x_im, w_re, w_im,
                                            use_pallas=True)
     keys = (None,) * 4
     if noise_key is not None:
         keys = jax.random.split(noise_key, 4)
+    if packed is not None:
+        w_re, w_im = packed.re, packed.im  # cim_matmul_int takes packed too
     mm = lambda a, b, k: ccim.cim_matmul_int(a, b, macro, cfg, k, fidelity,
                                              use_pallas=use_pallas)
     # four real sub-MACs sharing the same weight arrays (no duplication)
@@ -70,7 +91,7 @@ def complex_cim_matmul_int(
 
 def complex_cim_matmul(
     x: Array,                            # (M, K) complex
-    w: Array,                            # (K, N) complex
+    w,                                   # (K, N) complex, or packed pair
     cfg: CCIMConfig = DEFAULT_CONFIG,
     noise_key: Optional[Array] = None,
     macro: Optional[MacroInstance] = None,
@@ -81,18 +102,28 @@ def complex_cim_matmul(
 
     Re and Im of each operand share one scale (they share the array's
     full-scale), as in the silicon where both live on the same bitlines.
+    ``w`` may be a ``engine.PackedComplexCimWeights`` from
+    ``pack_complex_cim_weights`` -- bit-identical, weight conditioning
+    amortized across calls.
     """
     xr, xi = jnp.real(x), jnp.imag(x)
-    wr, wi = jnp.real(w), jnp.imag(w)
     sx = ccim.smf_scale(jnp.maximum(jnp.abs(xr), jnp.abs(xi)), axis=-1,
                         keepdims=True, cfg=cfg)
-    sw = ccim.smf_scale(jnp.maximum(jnp.abs(wr), jnp.abs(wi)), axis=0,
-                        keepdims=True, cfg=cfg)
     q = lambda v, s: ccim.quantize_smf(v, s, cfg)
-    yr, yi = complex_cim_matmul_int(
-        q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw), macro, cfg, noise_key,
-        fidelity, use_pallas=use_pallas,
-    )
+    if isinstance(w, PackedComplexCimWeights):
+        yr, yi = complex_cim_matmul_int(
+            q(xr, sx), q(xi, sx), w, None, macro, cfg, noise_key, fidelity,
+            use_pallas=use_pallas,
+        )
+        sw = w.re.scale
+    else:
+        wr, wi = jnp.real(w), jnp.imag(w)
+        sw = ccim.smf_scale(jnp.maximum(jnp.abs(wr), jnp.abs(wi)), axis=0,
+                            keepdims=True, cfg=cfg)
+        yr, yi = complex_cim_matmul_int(
+            q(xr, sx), q(xi, sx), q(wr, sw), q(wi, sw), macro, cfg, noise_key,
+            fidelity, use_pallas=use_pallas,
+        )
     scale = sx * jnp.reshape(sw, (1, -1))
     return (yr * scale + 1j * (yi * scale)).astype(jnp.complex64)
 

@@ -1,0 +1,298 @@
+"""Prepacked-weight CIM execution engine: quantize/decompose once, serve many.
+
+The silicon macro is weight-stationary: quantized signed-magnitude weights
+are written into the SRAM array once and every subsequent MAC only streams
+activations.  The software stack mirrors that here -- ``pack_cim_weights``
+runs the full weight conditioning pipeline (per-channel SMF scale ->
+integer quantization -> sign/magnitude split -> folded MSB DCIM planes ->
+backend-specific layouts) ONE time, and ``packed_cim_matmul`` serves every
+later call with activation-only work.  Outputs are bit-identical to the
+unpacked path for every fidelity, including the noise draw: packing is a
+caching transform, not an approximation.
+
+Storage layouts carried by ``PackedCimWeights`` (all derived from the same
+integer weights, each feeding one consumer):
+
+  sign/mag        raw SMF storage, (K, N) int8 -- the bit-cell contents;
+                  reconstructs w_q for the bit_true / broadcast / exact
+                  fidelities (cold paths).
+  gemm_w/gemm_planes
+                  (C, L, N) float32 chunked copies for the matmul-ized
+                  fast path (hybrid_mac_fast_gemm_prepacked): the float
+                  weight copy plus one folded signed DCIM plane per
+                  distinct x bit-plane j.
+  pallas_w/pallas_planes
+                  (Kp, Np) int8 block-padded tiles for the Pallas kernels
+                  (padding is M-independent by construction, see
+                  kernels.ccim_matmul.ops.pick_weight_blocks).
+
+The trade is deliberate: ~4x the weight bytes of a bf16 matrix buys zero
+per-call weight conditioning -- the same area-for-latency trade the 2D
+capacitor array makes in silicon.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ccim import (
+    CCIMConfig,
+    DEFAULT_CONFIG,
+    MacroInstance,
+    _kernel_numerics_match,
+    _pad_to_chunks,
+    cim_matmul_int,
+    fold_dcim_planes,
+    hybrid_mac_fast_gemm_prepacked,
+    quantize_smf,
+    smf_scale,
+    split_sign_mag,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedCimWeights:
+    """One weight matrix, conditioned once for every macro execution path.
+
+    A registered pytree: jit/vmap/scan slice and trace through it, so a
+    stack of packed projections (leading layer axis) drops straight into
+    the model zoo's scanned layer stacks.  ``k_dim``/``n_dim`` ride along
+    as static metadata (the padded buffers lose the logical shape).
+    """
+
+    scale: Array                      # smf_scale output: (1, N) or scalar
+    sign: Array                       # (K, N) int8 in {-1, +1}
+    mag: Array                        # (K, N) int8 in [0, 127]
+    gemm_w: Array                     # (C, L, N) float32 chunked weights
+    gemm_planes: Tuple[Array, ...]    # per distinct j: (C, L, N) float32
+    pallas_w: Array                   # (Kp, Np) int8, block-padded
+    pallas_planes: Array              # (n_j, Kp, Np) int8 folded planes
+    k_dim: int                        # static: logical K
+    n_dim: int                        # static: logical N
+    cfg: CCIMConfig                   # static: the macro config packed FOR
+                                      # (plane fold + chunking are cfg-
+                                      # specific; use-time mismatch errors)
+
+    def wq(self) -> Array:
+        """Reconstruct the raw integer SMF weights (cold-path fidelities)."""
+        return self.sign.astype(jnp.int32) * self.mag.astype(jnp.int32)
+
+    def dequantized(self) -> Array:
+        """float32 (K, N) dequantized weights (e.g. for the STE backward)."""
+        return self.wq().astype(jnp.float32) * jnp.reshape(self.scale, (1, -1))
+
+
+jax.tree_util.register_dataclass(
+    PackedCimWeights,
+    data_fields=["scale", "sign", "mag", "gemm_w", "gemm_planes",
+                 "pallas_w", "pallas_planes"],
+    meta_fields=["k_dim", "n_dim", "cfg"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedComplexCimWeights:
+    """Co-located (Re, Im) weight pair packed once, one shared full-scale.
+
+    Mirrors the complex bit-cell: both components live in the same array
+    and share the bitline full-scale, so one pack serves all four real
+    sub-MACs of (a+bi)(c+di)."""
+
+    re: PackedCimWeights
+    im: PackedCimWeights
+
+
+jax.tree_util.register_dataclass(
+    PackedComplexCimWeights, data_fields=["re", "im"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Packing (the write-the-array step; run once per weight matrix)
+# ---------------------------------------------------------------------------
+
+
+def pack_quantized_cim_weights(
+    wq: Array,                        # (K, N) ints in [-127, 127]
+    scale: Array,                     # the smf_scale the ints were made with
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> PackedCimWeights:
+    """Pack already-quantized integer weights (the array-write step)."""
+    from ..kernels.ccim_matmul.ops import pick_weight_blocks
+
+    K, N = wq.shape
+    sign, mag = split_sign_mag(wq)
+    planes = fold_dcim_planes(wq, cfg)
+
+    # fast-GEMM layout: K padded to whole ADC conversions, chunked (C, L, N)
+    C = _pad_to_chunks(K, cfg.acc_len)
+    pad_k = C * cfg.acc_len - K
+    chunk = lambda v: jnp.pad(v, ((0, pad_k), (0, 0))).reshape(
+        C, cfg.acc_len, N)
+    gemm_w = chunk(wq).astype(jnp.float32)
+    gemm_planes = tuple(chunk(p).astype(jnp.float32) for p in planes)
+
+    # Pallas layout: block-padded once (M-independent by construction)
+    _, _, Np, Kp = pick_weight_blocks(K, N)
+    blockpad = lambda v: jnp.pad(v, ((0, Kp - K), (0, Np - N))).astype(jnp.int8)
+    pallas_w = blockpad(wq)
+    pallas_planes = jnp.stack([blockpad(p) for p in planes])
+
+    return PackedCimWeights(
+        scale=scale,
+        sign=sign.astype(jnp.int8),
+        mag=mag.astype(jnp.int8),
+        gemm_w=gemm_w,
+        gemm_planes=gemm_planes,
+        pallas_w=pallas_w,
+        pallas_planes=pallas_planes,
+        k_dim=K,
+        n_dim=N,
+        cfg=cfg,
+    )
+
+
+def pack_cim_weights(
+    w: Array,                         # (K, N) float weights
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    per_channel: bool = True,
+) -> PackedCimWeights:
+    """Quantize + decompose a float weight matrix once (PTQ array write).
+
+    Matches ``cim_matmul``'s weight conditioning exactly (same scale, same
+    rounding), so packed and unpacked execution are bit-identical.
+    """
+    w = w.astype(jnp.float32)
+    sw = (smf_scale(w, axis=0, keepdims=True, cfg=cfg) if per_channel
+          else smf_scale(w, cfg=cfg))
+    return pack_quantized_cim_weights(quantize_smf(w, sw, cfg), sw, cfg)
+
+
+def pack_complex_cim_weights(
+    w_re: Array, w_im: Array,         # (K, N) float weights
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+) -> PackedComplexCimWeights:
+    """Pack a co-located complex weight pair with one shared full-scale
+    (Re and Im share the array's bitlines in silicon)."""
+    w_re = w_re.astype(jnp.float32)
+    w_im = w_im.astype(jnp.float32)
+    sw = smf_scale(jnp.maximum(jnp.abs(w_re), jnp.abs(w_im)), axis=0,
+                   keepdims=True, cfg=cfg)
+    return PackedComplexCimWeights(
+        re=pack_quantized_cim_weights(quantize_smf(w_re, sw, cfg), sw, cfg),
+        im=pack_quantized_cim_weights(quantize_smf(w_im, sw, cfg), sw, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Packed execution (the serve-many step)
+# ---------------------------------------------------------------------------
+
+
+def packed_cim_matmul_int(
+    x_q: Array,                       # (M, K) ints in [-127, 127]
+    packed: PackedCimWeights,
+    macro: Optional[MacroInstance] = None,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    fidelity: str = "fast",
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """Integer GEMM against prepacked weights; bit-identical to
+    ``cim_matmul_int(x_q, packed.wq(), ...)`` for every fidelity."""
+    M, K = x_q.shape
+    assert K == packed.k_dim, (K, packed.k_dim)
+    if packed.cfg != cfg:
+        raise ValueError(
+            "PackedCimWeights were packed for a different CCIMConfig than "
+            "they are being served with (plane fold and chunk layout are "
+            f"config-specific): packed for {packed.cfg}, serving {cfg}. "
+            "Re-pack the weights for the serving config.")
+    if fidelity == "fast" and noise_key is None and _kernel_numerics_match(cfg):
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        if use_pallas:
+            from ..kernels.ccim_matmul.ops import ccim_matmul_int_prepacked
+            return ccim_matmul_int_prepacked(
+                x_q, packed.pallas_w,
+                packed.pallas_planes[0], packed.pallas_planes[1],
+                k_dim=packed.k_dim, n_dim=packed.n_dim, use_pallas=True)
+    if fidelity == "fast":
+        C = packed.gemm_w.shape[0]
+        pad = C * cfg.acc_len - K
+        xq = jnp.pad(x_q, ((0, 0), (0, pad))).reshape(M, C, cfg.acc_len)
+        return hybrid_mac_fast_gemm_prepacked(
+            xq, packed.gemm_w, packed.gemm_planes, noise_key, cfg
+        ) * cfg.dcim_lsb
+    # cold-path fidelities reconstruct the raw ints (one O(K*N) multiply,
+    # dwarfed by their own per-bit-product work)
+    return cim_matmul_int(x_q, packed.wq(), macro, cfg, noise_key, fidelity,
+                          use_pallas=use_pallas)
+
+
+def packed_cim_matmul(
+    x: Array,                         # (M, K) float activations
+    packed: PackedCimWeights,
+    cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_key: Optional[Array] = None,
+    macro: Optional[MacroInstance] = None,
+    fidelity: str = "fast",
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """float (M,K) @ packed -> (M,N): per-row activation quantization is
+    the ONLY conditioning left on the hot path (weights sit in the array)."""
+    sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)
+    xq = quantize_smf(x, sx, cfg)
+    y_int = packed_cim_matmul_int(xq, packed, macro, cfg, noise_key, fidelity,
+                                  use_pallas=use_pallas)
+    return y_int.astype(jnp.float32) * sx * jnp.reshape(packed.scale, (1, -1))
+
+
+# ---------------------------------------------------------------------------
+# The engine handle (what model configs carry instead of a bare CCIMConfig)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CimEngine:
+    """Execution-policy handle: macro config + fidelity + kernel routing.
+
+    One engine serves both operand kinds -- ``matmul`` dispatches on
+    whether the weight is raw floats or a ``PackedCimWeights`` -- so model
+    code (``models.layers._dense``) stays a one-liner and serving stacks
+    can swap packed weights in without touching the layers.
+    """
+
+    cfg: CCIMConfig = DEFAULT_CONFIG
+    fidelity: str = "fast"
+    use_pallas: Optional[bool] = None
+    macro: Optional[MacroInstance] = None
+
+    def pack(self, w: Array, per_channel: bool = True) -> PackedCimWeights:
+        return pack_cim_weights(w, self.cfg, per_channel)
+
+    def pack_complex(self, w_re: Array, w_im: Array) -> PackedComplexCimWeights:
+        return pack_complex_cim_weights(w_re, w_im, self.cfg)
+
+    def matmul(self, x: Array, w, noise_key: Optional[Array] = None) -> Array:
+        """(..., K) @ w -> (..., N) with STE gradients; w raw or packed."""
+        from .qat import cim_linear, cim_linear_packed
+        if isinstance(w, PackedCimWeights):
+            return cim_linear_packed(x, w, noise_key, self.cfg, self.fidelity,
+                                     self.use_pallas)
+        return cim_linear(x, w, noise_key, self.cfg, self.fidelity,
+                          self.use_pallas)
+
+    def matmul_int(self, x_q: Array, w,
+                   noise_key: Optional[Array] = None) -> Array:
+        if isinstance(w, PackedCimWeights):
+            return packed_cim_matmul_int(
+                x_q, w, self.macro, self.cfg, noise_key, self.fidelity,
+                use_pallas=self.use_pallas)
+        return cim_matmul_int(x_q, w, self.macro, self.cfg, noise_key,
+                              self.fidelity, use_pallas=self.use_pallas)

@@ -12,12 +12,14 @@ per call-site/step if the caller splits keys (as train loops do).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .ccim import CCIMConfig, DEFAULT_CONFIG, cim_matmul
+from .engine import PackedCimWeights, packed_cim_matmul
 
 Array = jax.Array
 
@@ -53,9 +55,65 @@ def _bwd(cfg, fidelity, use_pallas, res, g):
 cim_linear.defvjp(_fwd, _bwd)
 
 
-def maybe_cim_linear(x: Array, w: Array, cim_cfg: Optional[CCIMConfig],
+# ---------------------------------------------------------------------------
+# Packed-weight STE overload (weight-stationary serving / error-recovery
+# finetuning of activations around frozen array contents)
+# ---------------------------------------------------------------------------
+
+
+def _zero_cotangent(tree):
+    """Structure-matching zero cotangent: float0 for integer leaves (the
+    packed bit-cell contents are not differentiable), zeros elsewhere."""
+    def z(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            return np.zeros(leaf.shape, jax.dtypes.float0)
+        return jnp.zeros_like(leaf)
+    return jax.tree.map(z, tree)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def cim_linear_packed(x: Array, packed: PackedCimWeights,
+                      noise_key: Optional[Array],
+                      cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
+                      use_pallas: Optional[bool] = None) -> Array:
+    """(..., K) @ packed -> (..., N) through the macro, STE gradients.
+
+    Forward is bit-identical to ``cim_linear`` on the float weights the
+    pack was built from; backward uses the DEQUANTIZED packed weights
+    (sign*mag*scale) -- the gradient the activations actually see through
+    the frozen array, which is what error-recovery finetuning wants.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = packed_cim_matmul(x2.astype(jnp.float32), packed, cfg,
+                          noise_key=noise_key, fidelity=fidelity,
+                          use_pallas=use_pallas)
+    return y.reshape(*lead, packed.n_dim).astype(x.dtype)
+
+
+def _fwd_packed(x, packed, noise_key, cfg, fidelity, use_pallas):
+    y = cim_linear_packed(x, packed, noise_key, cfg, fidelity, use_pallas)
+    return y, (x, packed)
+
+
+def _bwd_packed(cfg, fidelity, use_pallas, res, g):
+    x, packed = res
+    w_deq = packed.dequantized()
+    gx = jnp.einsum("...n,kn->...k", g, w_deq).astype(x.dtype)
+    return gx, _zero_cotangent(packed), None
+
+
+cim_linear_packed.defvjp(_fwd_packed, _bwd_packed)
+
+
+def maybe_cim_linear(x: Array, w: Union[Array, PackedCimWeights],
+                     cim_cfg: Optional[CCIMConfig],
                      noise_key: Optional[Array] = None) -> Array:
-    """Dense matmul unless a CIM config is provided (the model-zoo hook)."""
+    """Dense matmul unless a CIM config is provided (the model-zoo hook).
+    Packed weights always execute on the macro (they ARE array contents)."""
+    if isinstance(w, PackedCimWeights):
+        return cim_linear_packed(x, w, noise_key, cim_cfg or DEFAULT_CONFIG,
+                                 "fast")
     if cim_cfg is None:
         return x @ w
     return cim_linear(x, w, noise_key, cim_cfg, "fast")

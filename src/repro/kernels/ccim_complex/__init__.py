@@ -1,3 +1,5 @@
-from .kernel import ccim_complex_matmul_pallas  # noqa: F401
-from .ops import ccim_complex_matmul, ccim_complex_matmul_int  # noqa: F401
+from .kernel import (ccim_complex_matmul_pallas,  # noqa: F401
+                     ccim_complex_matmul_prepacked_pallas)
+from .ops import (ccim_complex_matmul, ccim_complex_matmul_int,  # noqa: F401
+                  ccim_complex_matmul_int_prepacked)
 from .ref import ccim_complex_matmul_ref  # noqa: F401

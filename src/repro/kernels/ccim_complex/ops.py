@@ -11,8 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..ccim_matmul.ops import _pad_to, pick_gemm_blocks
-from .kernel import ACC_LEN, ccim_complex_matmul_pallas
+from ..ccim_matmul.ops import (_pad_to, _pick_block, pick_gemm_blocks,
+                               pick_weight_blocks)
+from .kernel import (ACC_LEN, ccim_complex_matmul_pallas,
+                     ccim_complex_matmul_prepacked_pallas)
 from .ref import ccim_complex_matmul_ref
 
 
@@ -51,6 +53,45 @@ def ccim_complex_matmul_int(
         bm=bm, bn=bn, bk=bk, interpret=interpret,
     )
     return y_re[:M, :N], y_im[:M, :N]
+
+
+def ccim_complex_matmul_int_prepacked(
+    x_re: jax.Array, x_im: jax.Array,     # (M, K) ints in [-127, 127]
+    w_re: jax.Array, w_im: jax.Array,     # (Kp, Np) int8, pack-time padded
+    wr_p6: jax.Array, wr_p5: jax.Array,   # (Kp, Np) int8 folded Re planes
+    wi_p6: jax.Array, wi_p5: jax.Array,   # (Kp, Np) int8 folded Im planes
+    *,
+    k_dim: int, n_dim: int,
+    use_pallas: bool | None = None, interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Prepacked fused complex macro GEMM: one co-located (Re, Im) weight
+    pack serves all four real sub-MACs; only activations are padded and
+    decomposed per call."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    M, K = x_re.shape
+    assert K == k_dim, (K, k_dim)
+    bn, bk, Np, Kp = pick_weight_blocks(k_dim, n_dim)
+    assert w_re.shape == (Kp, Np), (w_re.shape, Kp, Np)
+    if not use_pallas:
+        pk = ((0, 0), (0, Kp - K))
+        yr, yi = ccim_complex_matmul_ref(
+            jnp.pad(x_re, pk).astype(jnp.int32),
+            jnp.pad(x_im, pk).astype(jnp.int32),
+            w_re.astype(jnp.int32), w_im.astype(jnp.int32))
+        return yr[:, :n_dim], yi[:, :n_dim]
+    bm = _pick_block(M, 128)
+    Mp = _pad_to(M, bm)
+    px = ((0, Mp - M), (0, Kp - K))
+    y_re, y_im = ccim_complex_matmul_prepacked_pallas(
+        jnp.pad(x_re, px).astype(jnp.int8), jnp.pad(x_im, px).astype(jnp.int8),
+        w_re, w_im, wr_p6, wr_p5, wi_p6, wi_p5,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y_re[:M, :n_dim], y_im[:M, :n_dim]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

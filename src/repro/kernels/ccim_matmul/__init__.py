@@ -1,3 +1,4 @@
-from .kernel import ccim_matmul_pallas  # noqa: F401
-from .ops import ccim_matmul, ccim_matmul_int  # noqa: F401
+from .kernel import ccim_matmul_pallas, ccim_matmul_prepacked_pallas  # noqa: F401
+from .ops import (ccim_matmul, ccim_matmul_int,  # noqa: F401
+                  ccim_matmul_int_prepacked, pick_weight_blocks)
 from .ref import ccim_matmul_ref  # noqa: F401

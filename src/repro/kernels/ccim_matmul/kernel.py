@@ -89,6 +89,92 @@ def _ccim_kernel(x_ref, w_ref, o_ref, acc_ref, *, bk: int, n_k: int):
         o_ref[...] = acc_ref[...]
 
 
+def _ccim_kernel_prepacked(x_ref, w_ref, w6_ref, w5_ref, o_ref, acc_ref,
+                           *, bk: int, n_k: int):
+    """Prepacked-weight variant: the folded signed MSB planes of w arrive
+    as kernel inputs (packed once, off the hot path -- weight-stationary,
+    as bit-cells in the silicon array), so the per-step weight work drops
+    to zero and dcim needs 2 plane dots instead of 3:
+
+        w6_ref holds s_w * (2*b6(|w|) + b5(|w|))   (pairs with x bit 6)
+        w5_ref holds s_w * b6(|w|)                 (pairs with x bit 5)
+
+    Integer arithmetic is unchanged, so outputs stay bit-identical to
+    ``_ccim_kernel`` on the same operands.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)            # (bm, bk)
+    w = w_ref[...].astype(jnp.int32)            # (bk, bn)
+    wp6 = w6_ref[...].astype(jnp.int32)         # (bk, bn) folded plane, |.|<=3
+    wp5 = w5_ref[...].astype(jnp.int32)         # (bk, bn) folded plane, |.|<=1
+    bm, bn = x.shape[0], w.shape[1]
+    c = bk // ACC_LEN
+
+    # activation-side decomposition only (activations stream, as in silicon)
+    sx = jnp.where(x < 0, -1, 1)
+    mx = jnp.abs(x)
+    x6 = sx * ((mx >> 6) & 1)
+    x5 = sx * ((mx >> 5) & 1)
+
+    to_xc = lambda v: v.reshape(bm, c, ACC_LEN).swapaxes(0, 1)  # (C, bm, L)
+    to_wc = lambda v: v.reshape(c, ACC_LEN, bn)                 # (C, L, bn)
+    exact = _chunk_dot(to_xc(x), to_wc(w))
+    dcim = _chunk_dot(to_xc(x6), to_wc(wp6)) + _chunk_dot(to_xc(x5), to_wc(wp5))
+
+    acim = exact - dcim * DCIM_LSB
+    code = jnp.clip(
+        jnp.floor_divide(acim + DCIM_LSB // 2, DCIM_LSB), -ADC_HALF, ADC_HALF - 1
+    )
+    y8 = dcim + code
+    acc_ref[...] += jnp.sum(y8, axis=0) * DCIM_LSB
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def ccim_matmul_prepacked_pallas(
+    x_q: jax.Array,           # (M, K) int8, values in [-127, 127]
+    w_q: jax.Array,           # (K, N) int8
+    w_p6: jax.Array,          # (K, N) int8 folded plane s*(2*b6+b5)
+    w_p5: jax.Array,          # (K, N) int8 folded plane s*b6
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Prepacked-weight hybrid-CIM GEMM -> (M, N) int32 at scale 2^11."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2
+    assert w_p6.shape == (K, N) and w_p5.shape == (K, N)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk % ACC_LEN == 0
+    n_k = K // bk
+
+    kernel = functools.partial(_ccim_kernel_prepacked, bk=bk, n_k=n_k)
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            w_spec, w_spec, w_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, w_p6, w_p5)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )

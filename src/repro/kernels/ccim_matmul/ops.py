@@ -10,7 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import ACC_LEN, DCIM_LSB, ccim_matmul_pallas
+from .kernel import (ACC_LEN, DCIM_LSB, ccim_matmul_pallas,
+                     ccim_matmul_prepacked_pallas)
 from .ref import ccim_matmul_ref
 
 
@@ -49,6 +50,53 @@ def pick_gemm_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
     bm, bn = _pick_block(M, 128), _pick_block(N, 128)
     bk = _pick_k_block(_pad_to(K, ACC_LEN) // ACC_LEN) * ACC_LEN
     return bm, bn, bk
+
+
+def pick_weight_blocks(K: int, N: int) -> tuple[int, int, int, int]:
+    """(bn, bk, Np, Kp) weight-side block selection and padded dims.
+
+    Deliberately M-independent (bm only shapes the activation tile), so a
+    weight matrix can be padded ONCE at pack time and reused for every
+    activation batch shape -- the weight-stationary contract.
+    """
+    bn = _pick_block(N, 128)
+    bk = _pick_k_block(_pad_to(K, ACC_LEN) // ACC_LEN) * ACC_LEN
+    return bn, bk, _pad_to(N, bn), _pad_to(_pad_to(K, ACC_LEN), bk)
+
+
+def ccim_matmul_int_prepacked(
+    x_q: jax.Array,           # (M, K) ints in [-127, 127]
+    w_q: jax.Array,           # (Kp, Np) int8, block-padded at pack time
+    w_p6: jax.Array,          # (Kp, Np) int8 folded plane s*(2*b6+b5)
+    w_p5: jax.Array,          # (Kp, Np) int8 folded plane s*b6
+    *,
+    k_dim: int, n_dim: int,
+    use_pallas: bool | None = None, interpret: bool | None = None,
+) -> jax.Array:
+    """Prepacked-weight macro GEMM: only the activations are padded and
+    decomposed per call.  Bit-identical to ``ccim_matmul_int`` on the raw
+    integer weights the pack was built from."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    M, K = x_q.shape
+    assert K == k_dim, (K, k_dim)
+    bn, bk, Np, Kp = pick_weight_blocks(k_dim, n_dim)
+    assert w_q.shape == (Kp, Np), (w_q.shape, Kp, Np)
+    if not use_pallas:
+        xp = jnp.pad(x_q, ((0, 0), (0, Kp - K)))
+        return ccim_matmul_ref(xp.astype(jnp.int32),
+                               w_q.astype(jnp.int32))[:, :n_dim]
+    bm = _pick_block(M, 128)
+    Mp = _pad_to(M, bm)
+    xp = jnp.pad(x_q, ((0, Mp - M), (0, Kp - K)))
+    y = ccim_matmul_prepacked_pallas(
+        xp.astype(jnp.int8), w_q, w_p6, w_p5,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y[:M, :n_dim]
 
 
 def ccim_matmul_int(

@@ -1,11 +1,25 @@
 """Batched serving driver: prefill a batch of prompts, decode N tokens.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--cim]
+      --batch 4 --prompt-len 32 --gen 16 [--cim] [--no-pack]
 
 Continuous-batching-shaped loop: a fixed decode batch, per-slot stop
 handling, greedy or temperature sampling.  Exercised by
-tests/test_serve.py and examples/cim_serve.py.
+tests/test_serve.py, tests/test_engine.py and examples/cim_serve.py.
+
+Serving dataflow under --cim (weight-stationary, like the silicon):
+
+  pack     : every projection is quantized + bit-plane-decomposed ONCE
+             (lm.pack_cim_params), off the token loop -- the array write.
+  prefill  : one batched forward over the prompt fills the KV cache.
+  decode   : activation-only quantization per token; generated tokens are
+             collected ON DEVICE and transferred once at the end (the old
+             per-token np.asarray forced a host sync every step and
+             serialized the whole loop against the device).
+
+``--no-pack`` keeps the legacy per-call weight conditioning -- the
+pre-refactor baseline benchmarks compare against; tokens are bit-identical
+either way.
 """
 from __future__ import annotations
 
@@ -24,10 +38,15 @@ from ..models import lm
 
 def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, cim: bool = False, temperature: float = 0.0,
-          seed: int = 0):
+          seed: int = 0, pack: bool = True, return_stats: bool = False):
+    """Returns generated tokens (batch, gen); with ``return_stats=True``,
+    returns (tokens, stats) where stats separates compile / pack /
+    prefill / decode time -- prefill and decode steps are AOT-compiled up
+    front, so every throughput number is pure execution."""
     cfg = get_config(arch, smoke=smoke)
     if cim:
         cfg = dataclasses.replace(cfg, cim_mode=True)
+    pack = pack and cim
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=prompt_len,
                       global_batch=batch, seed=seed,
                       n_frontend_tokens=cfg.n_frontend_tokens
@@ -40,19 +59,38 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     fe = (jnp.asarray(b["frontend_embs"]).astype(jnp.bfloat16)
           if "frontend_embs" in b else None)
 
+    t_pack = 0.0
+    if pack:
+        t0 = time.time()
+        params = jax.block_until_ready(
+            jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params))
+        t_pack = time.time() - t0
+
     max_seq = prompt_len + gen + (fe.shape[1] if fe is not None else 0)
     cache = lm.init_cache(cfg, batch, max_seq)
+    # AOT-compile both steps so every reported time is pure execution
+    # (trace+compile otherwise dominates prefill_s at smoke scale and any
+    # PR touching compile time would show a phantom throughput change);
+    # lowering with the pre-prefill cache is sound -- cache shapes are
+    # static across the whole generation.
+    t0 = time.time()
     prefill = jax.jit(lambda p, t, c, f: lm.prefill(p, cfg, t, c, f),
-                      donate_argnums=(2,))
+                      donate_argnums=(2,)
+                      ).lower(params, tokens, cache, fe).compile()
+    tok0 = jnp.zeros((batch, 1), jnp.int32)
     decode = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c),
-                     donate_argnums=(2,))
+                     donate_argnums=(2,)).lower(params, tok0, cache).compile()
+    t_compile = time.time() - t0
 
     t0 = time.time()
     logits, cache = prefill(params, tokens, cache, fe)
-    out = []
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    for i in range(gen):
-        out.append(np.asarray(tok))
+    tok.block_until_ready()
+    t_prefill = time.time() - t0
+
+    out = [tok]                      # device-side; one transfer at the end
+    t0 = time.time()
+    for i in range(gen - 1):
         logits, cache = decode(params, tok, cache)
         if temperature > 0:
             key, sub = jax.random.split(key)
@@ -60,27 +98,50 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
                 sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    dt = time.time() - t0
-    gen_tokens = np.concatenate(out, axis=1)
-    print(f"[serve] {arch}: batch {batch}, prompt {prompt_len}, "
-          f"generated {gen} tokens in {dt:.2f}s "
-          f"({batch*gen/dt:.1f} tok/s)")
+        out.append(tok)
+    gen_tokens = np.asarray(jnp.concatenate(out, axis=1))
+    t_decode = time.time() - t0
+
+    decode_steps = gen - 1
+    decode_tok_s = (batch * decode_steps / t_decode
+                    if decode_steps and t_decode > 0 else float("nan"))
+    stats = dict(
+        arch=arch, batch=batch, prompt_len=prompt_len, gen=gen,
+        cim=cim, packed=pack,
+        compile_s=round(t_compile, 4),
+        pack_s=round(t_pack, 4),
+        prefill_s=round(t_prefill, 4),
+        decode_s=round(t_decode, 4),
+        decode_tok_s=round(decode_tok_s, 2),
+        prefill_tok_s=round(batch * prompt_len / t_prefill, 2)
+        if t_prefill > 0 else float("nan"),
+    )
+    mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
+    print(f"[serve] {arch} ({mode}): batch {batch}, prompt {prompt_len}, "
+          f"gen {gen} | compile {t_compile:.2f}s, pack {t_pack:.2f}s, "
+          f"prefill {t_prefill:.2f}s, decode {t_decode:.2f}s "
+          f"({decode_tok_s:.1f} tok/s)")
+    if return_stats:
+        return gen_tokens, stats
     return gen_tokens
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True, help="--no-smoke runs the full-size arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cim", action="store_true")
+    ap.add_argument("--no-pack", dest="pack", action="store_false",
+                    help="legacy per-call weight conditioning (baseline)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen, cim=args.cim,
-          temperature=args.temperature)
+          temperature=args.temperature, pack=args.pack)
 
 
 if __name__ == "__main__":

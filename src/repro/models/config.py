@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from ..core.ccim import CCIMConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -56,9 +58,13 @@ class ModelConfig:
     act: str = "silu"
     dtype: str = "bfloat16"
 
-    # CIM execution mode (the paper's technique as a first-class feature)
+    # CIM execution mode (the paper's technique as a first-class feature).
+    # cim_cfg/cim_use_pallas are threaded into the execution engine
+    # (core.engine.CimEngine) -- no module-global macro config anywhere.
     cim_mode: bool = False             # run linear layers through the macro
     cim_fidelity: str = "fast"
+    cim_cfg: Optional[CCIMConfig] = None   # None -> the 28nm prototype macro
+    cim_use_pallas: Optional[bool] = None  # None -> auto (TPU backend only)
 
     # schedule hint (minicpm: WSD)
     lr_schedule: str = "cosine"        # "cosine" | "wsd"

@@ -6,9 +6,11 @@ Functional style: ``*_init(key, cfg) -> (params, axes)`` where ``axes`` is a
 same-structure tree of logical-dimension-name tuples consumed by
 distributed/sharding.py, and ``*_apply(params, x, ...)`` is pure.
 
-Every matmul routes through ``core.qat.maybe_cim_linear`` so any
+Every matmul routes through ``_dense`` -> ``core.engine.CimEngine`` so any
 architecture can run its projections on the emulated C-CIM macro
 (cfg.cim_mode) -- the paper's technique as a first-class execution mode.
+Projection weights may be prepacked ``PackedCimWeights`` (see
+``lm.pack_cim_params``): quantize/decompose once, serve many.
 """
 from __future__ import annotations
 
@@ -21,14 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.qat import cim_linear
-from ..core.ccim import CCIMConfig
+from ..core.ccim import DEFAULT_CONFIG
+from ..core.engine import CimEngine, PackedCimWeights
 from .config import ModelConfig
 
 Array = jax.Array
 Params = Dict[str, Any]
-
-_CIM_CFG = CCIMConfig()  # default prototype macro for cim_mode
 
 
 # ---------------------------------------------------------------------------
@@ -36,10 +36,30 @@ _CIM_CFG = CCIMConfig()  # default prototype macro for cim_mode
 # ---------------------------------------------------------------------------
 
 
-def _dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
-    """x (..., K) @ w (K, N) -- through the macro when cim_mode is on."""
+def cim_engine(cfg: ModelConfig) -> CimEngine:
+    """The execution engine a model config resolves to: macro config,
+    fidelity and Pallas routing all come from the config (no module
+    globals), so two models in one process can run different macros."""
+    return CimEngine(cfg=cfg.cim_cfg or DEFAULT_CONFIG,
+                     fidelity=cfg.cim_fidelity,
+                     use_pallas=cfg.cim_use_pallas)
+
+
+def _dense(x: Array, w, cfg: ModelConfig) -> Array:
+    """x (..., K) @ w (K, N) -- through the macro when cim_mode is on.
+
+    ``w`` may be a ``PackedCimWeights`` (prepacked array contents from
+    ``lm.pack_cim_params``): then the macro runs unconditionally with
+    activation-only quantization on the hot path.
+    """
+    if isinstance(w, PackedCimWeights):
+        if not cfg.cim_mode:
+            raise ValueError(
+                "packed CIM weights require cim_mode=True (packed params "
+                "are macro array contents, not float matrices)")
+        return cim_engine(cfg).matmul(x, w)
     if cfg.cim_mode:
-        return cim_linear(x, w, None, _CIM_CFG, cfg.cim_fidelity)
+        return cim_engine(cfg).matmul(x, w)
     return x @ w
 
 

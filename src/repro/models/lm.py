@@ -89,7 +89,12 @@ def _shared_block_init(cfg: ModelConfig, key, dtype):
     return p, a
 
 
-def init(key, cfg: ModelConfig) -> Tuple[Params, Dict]:
+def init(key, cfg: ModelConfig, pack_cim: bool = False) -> Tuple[Params, Dict]:
+    """Initialise params.  ``pack_cim=True`` (requires cfg.cim_mode) runs
+    the PTQ weight-conditioning pipeline on every projection at load time,
+    returning ``PackedCimWeights`` leaves -- the write-once/compute-many
+    deployment shape (see pack_cim_params).  The axes tree describes the
+    UNPACKED float params (sharding rules apply to training layouts)."""
     dtype = jnp.dtype(cfg.dtype)
     k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
     p, a = {}, {}
@@ -104,7 +109,62 @@ def init(key, cfg: ModelConfig) -> Tuple[Params, Dict]:
     if not cfg.tie_embeddings:
         p["lm_head"], a["lm_head"] = L._init_dense(
             k_head, cfg.d_model, cfg.vocab_size, ("head_embed", "vocab"), dtype=dtype)
+    if pack_cim:
+        p = pack_cim_params(p, cfg)
     return p, a
+
+
+# ---------------------------------------------------------------------------
+# prepacked CIM weights (weight-stationary serving)
+# ---------------------------------------------------------------------------
+
+
+# Projection leaves consumed by layers._dense -- the matmuls the macro
+# executes.  Everything else (embeddings, lm_head, MoE expert einsums,
+# routers, convs, norms) stays float.
+_CIM_PACKABLE = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention
+    "w1", "w2", "w3",                            # (shared-)MLP
+    "w_z", "w_x", "w_bc", "w_dt", "out_proj",    # mamba2 projections
+})
+
+
+def pack_cim_params(params: Params, cfg: ModelConfig) -> Params:
+    """Replace every _dense-consumed projection with PackedCimWeights.
+
+    This is the software analogue of writing the SRAM arrays: per-channel
+    SMF scales, integer sign/magnitude contents and folded MSB bit-planes
+    are computed ONCE here; prefill/decode then run activation-only
+    quantization.  Stacked (scanned) layer weights are packed under vmap,
+    so the packed leaves keep their leading layer axis and drop straight
+    into the scanned stacks.  Bit-identical to unpacked cim_mode execution.
+    """
+    if not cfg.cim_mode:
+        raise ValueError("pack_cim_params requires cfg.cim_mode=True")
+    eng = L.cim_engine(cfg)
+
+    def pack_leaf(v):
+        if v.ndim == 2:                      # (K, N): shared-block weights
+            return eng.pack(v)
+        if v.ndim == 3:                      # (layers, K, N): scanned stack
+            return jax.vmap(eng.pack)(v)
+        return v                             # MoE expert tensors etc.
+
+    def walk(tree, in_moe: bool):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                # MoE expert tensors reuse the w1/w2/w3 names but feed
+                # einsums, not _dense; the shared expert under moe is a
+                # plain MLP and IS packable.
+                out[k] = walk(v, in_moe=(k == "moe"))
+            elif k in _CIM_PACKABLE and not in_moe:
+                out[k] = pack_leaf(v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(params, in_moe=False)
 
 
 # ---------------------------------------------------------------------------

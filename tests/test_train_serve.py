@@ -9,10 +9,16 @@ from repro.launch.train import train
 
 
 def test_train_loss_decreases():
-    _, _, losses = train("minicpm-2b", smoke=True, steps=12, batch=4,
+    """Loss trends down on the synthetic stream.  The signal at smoke
+    scale is slow (hash-uniform tokens: the only learnable structure is
+    flattening the logits toward uniform, and early global-norm clipping
+    scales steps down ~9x), so compare halves of a 60-step run instead of
+    the tails of a 12-step one -- the old window was inside the noise."""
+    _, _, losses = train("minicpm-2b", smoke=True, steps=60, batch=4,
                          seq=48, log_every=100)
+    losses = np.asarray(losses)
     assert np.isfinite(losses).all()
-    assert np.mean(losses[-4:]) < np.mean(losses[:4]), losses
+    assert losses[30:].mean() < losses[:30].mean(), losses
 
 
 def test_train_wsd_arch_uses_wsd():
