@@ -1,6 +1,7 @@
 """Serving benchmark: prepacked-weight CIM decode vs the legacy per-call
-weight-conditioning path (and the fp/bf16 reference), written to
-BENCH_serve.json for the per-PR perf trajectory.
+weight-conditioning path (and the fp/bf16 reference), plus the
+continuous-batching scheduler vs the lock-step loop on a mixed-length
+workload, written to BENCH_serve.json for the per-PR perf trajectory.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 
@@ -10,6 +11,13 @@ one-time pack cost.  The packed and unpacked
 CIM runs must emit bit-identical tokens: packing is a caching transform
 of the weight conditioning, not an approximation -- the benchmark asserts
 this before recording any number.
+
+The continuous-batching rows (fp and packed-CIM) report aggregate tok/s,
+slot occupancy and p50/p95 request latency for a mixed-length queue
+(stop lengths 4/16/8/12 over 4x the slot count) against the lock-step
+wave baseline running on the SAME compiled executables.  serve_continuous
+asserts per-request tokens are bit-identical between the two plans, so a
+scheduler regression fails the benchmark (and CI) outright.
 """
 import argparse
 import json
@@ -26,7 +34,7 @@ _BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         prompt_len: int = 16, gen: int = 48, repeats: int = 2,
         path: str = _BENCH_JSON) -> dict:
-    from repro.launch.serve import serve
+    from repro.launch.serve import serve, serve_continuous
 
     def best(cim: bool, pack: bool):
         """Best-of-repeats steady decode rate (robust to scheduler noise)."""
@@ -45,6 +53,19 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         "packed CIM serving diverged from the unpacked path"
 
     speedup = packed["decode_tok_s"] / unpacked["decode_tok_s"]
+
+    # continuous batching vs lock-step on a mixed-length queue; token
+    # parity with the lock-step plan is asserted inside serve_continuous
+    cb = {}
+    for mode, cim in (("fp", False), ("cim_packed", True)):
+        _, st = serve_continuous(arch, smoke=smoke, slots=batch,
+                                 prompt_len=prompt_len, n_requests=4 * batch,
+                                 stop_lengths=(4, 16, 8, 12), cim=cim,
+                                 pack=cim, repeats=max(repeats, 3))
+        cb[mode] = dict(continuous=st["continuous"], lockstep=st["lockstep"],
+                        tokens_match_lockstep=st["tokens_match_lockstep"],
+                        speedup_vs_lockstep=st["speedup_vs_lockstep"])
+
     result = dict(
         config=dict(arch=arch, smoke=smoke, batch=batch,
                     prompt_len=prompt_len, gen=gen, repeats=repeats),
@@ -53,6 +74,7 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         cim_packed=packed,
         packed_tokens_bit_identical=True,
         decode_speedup_packed_vs_unpacked=round(speedup, 2),
+        continuous_batching=cb,
     )
     with open(path, "w") as f:
         json.dump(result, f, indent=2)
@@ -61,6 +83,12 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
           f"cim unpacked {unpacked['decode_tok_s']}, "
           f"cim packed {packed['decode_tok_s']} "
           f"({speedup:.2f}x vs unpacked; pack cost {packed['pack_s']}s)")
+    for mode, row in cb.items():
+        print(f"# continuous batching ({mode}): "
+              f"{row['continuous']['tok_s']} tok/s at "
+              f"{row['continuous']['occupancy']:.0%} occupancy vs lock-step "
+              f"{row['lockstep']['tok_s']} ({row['speedup_vs_lockstep']}x, "
+              f"tokens identical)")
     print(f"# wrote {path}")
     return result
 

@@ -1,0 +1,415 @@
+"""Continuous-batching serving scheduler over a fixed pool of decode slots.
+
+The paper's macro is weight-stationary: weights are written once and
+activations stream.  The serving-system analogue is a fixed pool of decode
+slots over prepacked weights -- one compiled decode step serves the pool
+forever, and the scheduler's only job is keeping the slots full.  The
+lock-step loop in launch/serve.py wastes exactly what the macro's
+single-conversion trick saves: a finished sequence burns a slot (a
+conversion) until the slowest request ends.  Here every step advances only
+live slots, and a freed slot is refilled from the request queue through
+``lm.prefill_into_slot`` without recompiling anything.
+
+The entire serve loop is DEVICE-RESIDENT.  The request queue (prompts +
+per-request budgets/stop tokens) is staged into device buffers up front,
+and one AOT-compiled ``lax.while_loop`` runs a three-way ``lax.switch``
+until the queue is drained:
+
+  harvest : some slot finished (EOS or max-new-tokens, tracked by the
+            on-device ``live`` mask; finishes are parked in a ``pending``
+            mask) -> copy its output row into the per-request result
+            buffer and free the slot.
+  admit   : a slot is free and the queue is non-empty -> reset the slot,
+            batch-1 prefill the next queued prompt into the pool cache
+            (``lm.prefill_into_slot``; the slot index is traced, shapes
+            are static), sample the request's first token, arm its
+            counters.
+  step    : one pooled decode step; only live slots advance.
+
+The host syncs with the device exactly ONCE per workload -- there is no
+per-token (or even per-request) host round-trip, which is what lets the
+scheduler's fewer-wasted-slot-steps advantage survive dispatch latency
+even at smoke scale on CPU.
+
+Determinism contract (tested in tests/test_scheduler.py): a request's
+tokens depend only on (params, prompt, rid) -- NOT on which slot it ran
+in, what shared the pool with it, or when it was admitted.  Sampling keys
+are folded per request id (``fold_in(sampling_key(seed), rid)``) and each
+slot consumes its own key stream one split per generated token, so even
+temperature sampling is bit-identical to a solo run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+def sampling_key(seed: int) -> jax.Array:
+    """Sampling PRNG stream, deliberately distinct from the params-init
+    stream: serve.py used to feed PRNGKey(seed) to BOTH ``lm.init`` and
+    the decode-loop sampler (regression-tested in tests/test_scheduler.py)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), 0x53414D50)  # "SAMP"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  ``rid`` seeds the request's sampling
+    stream and must be unique within a run.  ``stop_token < 0`` disables
+    EOS detection (the request runs to ``max_new_tokens``)."""
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    stop_token: int = -1
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    tokens: np.ndarray            # (n,) generated tokens, stop token incl.
+    latency_s: float              # arrival (run start) -> completion
+    finish_iter: int              # loop iteration the request finished at
+
+
+@dataclasses.dataclass
+class ServeReport:
+    finished: List[FinishedRequest]
+    wall_s: float
+    n_steps: int                  # pooled decode steps
+    n_admits: int
+    slots: int
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(f.tokens) for f in self.finished)
+
+    @property
+    def tok_s(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else float("nan")
+
+    @property
+    def occupancy(self) -> float:
+        """Useful-token fraction of the slot-steps spent (admits each
+        yield one token; every pooled step spends ``slots`` slot-steps)."""
+        slot_steps = self.slots * self.n_steps + self.n_admits
+        return self.total_tokens / slot_steps if slot_steps else float("nan")
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        lats = sorted(f.latency_s for f in self.finished)
+        if not lats:
+            return {"p50_s": float("nan"), "p95_s": float("nan")}
+        pick = lambda q: lats[min(len(lats) - 1, int(q * (len(lats) - 1) + 0.5))]
+        return {"p50_s": pick(0.50), "p95_s": pick(0.95)}
+
+    def summary(self) -> Dict:
+        return dict(total_tokens=self.total_tokens,
+                    wall_s=round(self.wall_s, 4),
+                    tok_s=round(self.tok_s, 2),
+                    occupancy=round(self.occupancy, 4),
+                    n_steps=self.n_steps, n_admits=self.n_admits,
+                    slots=self.slots,
+                    **{k: round(v, 4) for k, v in
+                       self.latency_percentiles().items()})
+
+    def tokens_by_rid(self) -> Dict[int, np.ndarray]:
+        return {f.rid: f.tokens for f in self.finished}
+
+
+def _i32(v) -> jax.Array:
+    return jnp.asarray(v, jnp.int32)
+
+
+class ContinuousBatchingScheduler:
+    """Fixed-slot continuous batching, fully device-resident.
+
+    ``params`` may hold prepacked CIM weights (lm.pack_cim_params) -- the
+    scheduler never touches weights, so pack-once/serve-many carries
+    straight through.  ``max_new_cap`` bounds every request's
+    max_new_tokens and sizes the on-device output buffers; ``prompt_len``
+    is the single static prompt length (shorter prompts must be padded by
+    the caller -- static shapes are what keep the whole pool on a handful
+    of compiled executables).
+
+    Request latencies are exact at the workload level (one wall clock
+    around the device loop) and attributed per request by its finish
+    iteration: latency_i = wall * finish_iter_i / total_iters.  This is an
+    estimate -- admit iterations cost more than step iterations -- but the
+    loop never leaves the device, so there is no per-event host timestamp
+    to read without paying the sync the design removes.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, slots: int, prompt_len: int,
+                 max_new_cap: int, temperature: float = 0.0, seed: int = 0,
+                 pad_token: int = 0):
+        if cfg.family == "vlm":
+            raise NotImplementedError(
+                "scheduler is text-only for now (no per-request frontends)")
+        self.cfg, self.slots = cfg, slots
+        self.prompt_len, self.cap = prompt_len, max_new_cap
+        self.temperature, self.pad_token = temperature, pad_token
+        self._base_key = sampling_key(seed)
+        self.max_seq = prompt_len + max_new_cap
+        self._params = params
+        self._loops: Dict[int, object] = {}    # queue length -> executable
+
+        def sample(logits, keys):
+            """logits (R, V) f32, keys (R, 2) -> (R,) int32 tokens."""
+            if temperature <= 0:
+                return jnp.argmax(logits, -1).astype(jnp.int32)
+            return jax.vmap(lambda l, k: jax.random.categorical(
+                k, l / temperature))(logits, keys).astype(jnp.int32)
+
+        def arm_slot(params, st, slot, prompt, rid, max_new, stop):
+            """Reset + prefill ``slot`` with one request and sample its
+            first token.  A request can finish ON that token; the event is
+            parked in the pending mask like any step finish."""
+            logits, cache = lm.prefill_into_slot(params, cfg, prompt,
+                                                 st["cache"], slot)
+            k_next, k_use = jax.random.split(
+                jax.random.fold_in(self._base_key, rid))
+            tok = sample(logits[:, -1], k_use[None])[0]
+            fin0 = (tok == stop) | (max_new <= 1)
+            st = dict(st, cache=cache)
+            st["last_tok"] = st["last_tok"].at[slot, 0].set(tok)
+            st["out"] = (st["out"].at[slot].set(self.pad_token)
+                         .at[slot, 0].set(tok))
+            st["n_gen"] = st["n_gen"].at[slot].set(1)
+            st["max_new"] = st["max_new"].at[slot].set(max_new)
+            st["stop"] = st["stop"].at[slot].set(stop)
+            st["keys"] = st["keys"].at[slot].set(k_next)
+            st["live"] = st["live"].at[slot].set(~fin0)
+            st["pending"] = st["pending"].at[slot].set(fin0)
+            return st
+
+        def step(params, st):
+            """One pooled decode step; finishes land in pending."""
+            live = st["live"]
+            logits, cache = lm.decode_step(params, cfg, st["last_tok"],
+                                           st["cache"], live=live)
+            splits = jax.vmap(jax.random.split)(st["keys"])      # (B,2,2)
+            tok = sample(logits[:, -1], splits[:, 1])
+            tok = jnp.where(live, tok, jnp.int32(self.pad_token))
+            keys = jnp.where(live[:, None], splits[:, 0], st["keys"])
+            ar = jnp.arange(self.slots)
+            idx = jnp.minimum(st["n_gen"], self.cap - 1)
+            row = st["out"][ar, idx]
+            out = st["out"].at[ar, idx].set(jnp.where(live, tok, row))
+            n_gen = st["n_gen"] + live.astype(jnp.int32)
+            finished = live & ((tok == st["stop"]) | (n_gen >= st["max_new"]))
+            return dict(st, cache=cache, last_tok=tok[:, None], out=out,
+                        n_gen=n_gen, keys=keys, live=live & ~finished,
+                        pending=st["pending"] | finished)
+
+        self._arm_slot, self._step_fn = arm_slot, step
+        self._lockstep_exes = None
+
+    def _lockstep_executables(self):
+        """Lock-step baseline executables: batch-1 admit + drain-N-steps
+        (run_lockstep), compiled lazily against the same pool state."""
+        if self._lockstep_exes is None:
+            state = self._init_state()
+            p0 = _i32(np.zeros((1, self.prompt_len)))
+            z = _i32(0)
+            admit = (jax.jit(self._arm_slot, donate_argnums=(1,))
+                     .lower(self._params, state, z, p0, z, z, z).compile())
+
+            def drain(params, st, n):
+                return jax.lax.fori_loop(
+                    0, n, lambda _, s: self._step_fn(params, s), st)
+
+            drain = (jax.jit(drain, donate_argnums=(1,))
+                     .lower(self._params, state, z).compile())
+            self._lockstep_exes = (admit, drain)
+        return self._lockstep_exes
+
+    # -- device-resident serve loop ------------------------------------
+
+    def _build_loop(self, n_queue: int):
+        """Compile the whole-workload loop for a queue of n_queue requests."""
+        cfg, slots, cap, P = self.cfg, self.slots, self.cap, self.prompt_len
+
+        def serve_loop(params, st, q_toks, q_meta):
+            # q_toks (N, P) int32; q_meta (N, 3) int32: rid, max_new, stop
+            def occupied(st):
+                return st["live"] | st["pending"]
+
+            def harvest(c):
+                st = c["st"]
+                slot = jnp.argmax(st["pending"])
+                qidx = st["occupant"][slot]
+                c = dict(c)
+                c["res_out"] = c["res_out"].at[qidx].set(st["out"][slot])
+                c["res_n"] = c["res_n"].at[qidx].set(st["n_gen"][slot])
+                c["res_iter"] = c["res_iter"].at[qidx].set(c["n_iter"])
+                c["st"] = dict(st, pending=st["pending"].at[slot].set(False))
+                return c
+
+            def admit(c):
+                st, qidx = c["st"], c["q_head"]
+                slot = jnp.argmin(occupied(st))
+                prompt = jax.lax.dynamic_slice(q_toks, (qidx, 0), (1, P))
+                rid, max_new, stop = (q_meta[qidx, 0], q_meta[qidx, 1],
+                                      q_meta[qidx, 2])
+                st = self._arm_slot(params, st, slot, prompt, rid, max_new,
+                                    stop)
+                st = dict(st, occupant=st["occupant"].at[slot].set(qidx))
+                return dict(c, st=st, q_head=qidx + 1,
+                            n_admits=c["n_admits"] + 1)
+
+            def step(c):
+                return dict(c, st=self._step_fn(params, c["st"]),
+                            n_steps=c["n_steps"] + 1)
+
+            def body(c):
+                st = c["st"]
+                can_admit = (c["q_head"] < n_queue) & ~jnp.all(occupied(st))
+                branch = jnp.where(jnp.any(st["pending"]), 0,
+                                   jnp.where(can_admit, 1, 2))
+                c = jax.lax.switch(branch, [harvest, admit, step], c)
+                return dict(c, n_iter=c["n_iter"] + 1)
+
+            def cond(c):
+                return (jnp.any(occupied(c["st"]))
+                        | (c["q_head"] < n_queue))
+
+            carry = dict(
+                st=st, q_head=_i32(0), n_iter=_i32(0), n_steps=_i32(0),
+                n_admits=_i32(0),
+                res_out=jnp.full((n_queue, cap), self.pad_token, jnp.int32),
+                res_n=jnp.zeros((n_queue,), jnp.int32),
+                res_iter=jnp.zeros((n_queue,), jnp.int32),
+            )
+            c = jax.lax.while_loop(cond, body, carry)
+            return dict(res_out=c["res_out"], res_n=c["res_n"],
+                        res_iter=c["res_iter"], n_iter=c["n_iter"],
+                        n_steps=c["n_steps"], n_admits=c["n_admits"])
+
+        # no donation: the loop's outputs are only the result buffers, so
+        # the input state can't alias anything (XLA would warn and ignore)
+        state = self._init_state()
+        qt = _i32(np.zeros((n_queue, P)))
+        qm = _i32(np.zeros((n_queue, 3)))
+        return (jax.jit(serve_loop)
+                .lower(self._params, state, qt, qm).compile())
+
+    def _init_state(self) -> Dict:
+        B, cap = self.slots, self.cap
+        return dict(
+            cache=lm.init_cache(self.cfg, B, self.max_seq),
+            last_tok=jnp.full((B, 1), self.pad_token, jnp.int32),
+            live=jnp.zeros((B,), jnp.bool_),
+            n_gen=jnp.zeros((B,), jnp.int32),
+            max_new=jnp.zeros((B,), jnp.int32),
+            stop=jnp.full((B,), -1, jnp.int32),
+            out=jnp.full((B, cap), self.pad_token, jnp.int32),
+            keys=jnp.zeros((B, 2), jnp.uint32),
+            pending=jnp.zeros((B,), jnp.bool_),
+            occupant=jnp.zeros((B,), jnp.int32),
+        )
+
+    def _check(self, requests: Sequence[Request]):
+        for r in requests:
+            if len(r.prompt) != self.prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt len {len(r.prompt)} != "
+                    f"scheduler prompt_len {self.prompt_len}")
+            if r.max_new_tokens > self.cap:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
+                    f"> cap {self.cap}")
+        if len({r.rid for r in requests}) != len(requests):
+            raise ValueError("request rids must be unique within a run")
+
+    def compile_for(self, n_requests: int, lockstep: bool = False):
+        """Pre-compile the serve loop for a queue length (off the clock);
+        ``lockstep=True`` also pre-compiles the baseline executables so a
+        timed run_lockstep never pays compile."""
+        if n_requests not in self._loops:
+            self._loops[n_requests] = self._build_loop(n_requests)
+        if lockstep:
+            self._lockstep_executables()
+        return self._loops[n_requests]
+
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        """Serve ``requests`` (all arriving at t=0) to completion."""
+        self._check(requests)
+        loop = self.compile_for(len(requests))
+        q_toks = _i32(np.stack([np.asarray(r.prompt) for r in requests]))
+        q_meta = _i32(np.asarray(
+            [[r.rid, r.max_new_tokens, r.stop_token] for r in requests]))
+        state = jax.block_until_ready(self._init_state())  # off the clock,
+        t0 = time.time()                                   # like lockstep's
+        res = jax.block_until_ready(
+            loop(self._params, state, q_toks, q_meta))
+        wall = time.time() - t0
+        res_out, res_n = np.asarray(res["res_out"]), np.asarray(res["res_n"])
+        res_iter, n_iter = np.asarray(res["res_iter"]), int(res["n_iter"])
+        done = [FinishedRequest(
+            rid=r.rid, tokens=res_out[i, :res_n[i]].copy(),
+            latency_s=wall * int(res_iter[i]) / max(n_iter, 1),
+            finish_iter=int(res_iter[i]))
+            for i, r in enumerate(requests)]
+        return ServeReport(finished=done, wall_s=wall,
+                           n_steps=int(res["n_steps"]),
+                           n_admits=int(res["n_admits"]), slots=self.slots)
+
+    def run_lockstep(self, requests: Sequence[Request]) -> ServeReport:
+        """Lock-step baseline through the SAME per-slot machinery: waves
+        of ``slots`` requests all decode to the wave's longest budget, and
+        per-request stop handling is applied post-hoc by truncation -- the
+        pre-scheduler serve.py discipline, isolated so the benchmark delta
+        is pure scheduling (identical kernels, admit path and step math)."""
+        self._check(requests)
+        admit, drain = self._lockstep_executables()
+        state = self._init_state()
+        done: List[FinishedRequest] = []
+        n_steps = n_admits = 0
+        t0 = time.time()
+        for w0 in range(0, len(requests), self.slots):
+            wave = list(requests[w0:w0 + self.slots])
+            wave_max = max(r.max_new_tokens for r in wave)
+            for slot, r in enumerate(wave):
+                # stop=-1, budget=wave_max: every slot decodes the full wave
+                state = admit(
+                    self._params, state, _i32(slot),
+                    _i32(np.asarray(r.prompt)[None, :]), _i32(r.rid),
+                    _i32(wave_max), _i32(-1))
+                n_admits += 1
+            state = drain(self._params, state, _i32(wave_max - 1))
+            n_steps += wave_max - 1
+            out_h = np.asarray(state["out"])
+            t_wave = time.time() - t0
+            for slot, r in enumerate(wave):
+                toks = out_h[slot, :wave_max]
+                n = r.max_new_tokens
+                if r.stop_token >= 0:
+                    hits = np.nonzero(toks == r.stop_token)[0]
+                    if hits.size:
+                        n = min(n, int(hits[0]) + 1)
+                done.append(FinishedRequest(rid=r.rid, tokens=toks[:n].copy(),
+                                            latency_s=t_wave,
+                                            finish_iter=n_steps + n_admits))
+        return ServeReport(finished=done, wall_s=time.time() - t0,
+                           n_steps=n_steps, n_admits=n_admits,
+                           slots=self.slots)
+
+
+def mixed_length_requests(n: int, prompt_len: int, vocab_size: int,
+                          stop_lengths: Sequence[int] = (4, 16, 8, 12),
+                          seed: int = 0) -> List[Request]:
+    """Synthetic mixed-length workload: request i stops after
+    ``stop_lengths[i % len]`` tokens.  The interleaving is deliberately
+    adversarial for lock-step waves (short and long requests share one)."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab_size, prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=int(stop_lengths[i % len(stop_lengths)]))
+            for i in range(n)]

@@ -1,11 +1,15 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Serving drivers: fixed-batch lock-step loop + continuous batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--cim] [--no-pack]
+      --batch 4 --prompt-len 32 --gen 16 [--cim] [--no-pack] [--continuous]
 
-Continuous-batching-shaped loop: a fixed decode batch, per-slot stop
-handling, greedy or temperature sampling.  Exercised by
-tests/test_serve.py, tests/test_engine.py and examples/cim_serve.py.
+``serve`` is the LOCK-STEP driver: one fixed batch is prefilled together
+and decodes in lock step for exactly ``gen`` tokens -- there is no
+per-request stop handling here, and a short request occupies its slot
+until the whole batch ends.  It is the baseline the continuous-batching
+scheduler (launch/scheduler.py, ``serve_continuous`` below) is measured
+against: the scheduler tracks per-slot EOS/max-new-tokens on device and
+refills freed slots from a request queue mid-stream.
 
 Serving dataflow under --cim (weight-stationary, like the silicon):
 
@@ -13,13 +17,12 @@ Serving dataflow under --cim (weight-stationary, like the silicon):
              (lm.pack_cim_params), off the token loop -- the array write.
   prefill  : one batched forward over the prompt fills the KV cache.
   decode   : activation-only quantization per token; generated tokens are
-             collected ON DEVICE and transferred once at the end (the old
-             per-token np.asarray forced a host sync every step and
-             serialized the whole loop against the device).
+             collected ON DEVICE and transferred once at the end.
 
 ``--no-pack`` keeps the legacy per-call weight conditioning -- the
 pre-refactor baseline benchmarks compare against; tokens are bit-identical
-either way.
+either way.  Exercised by tests/test_train_serve.py,
+tests/test_scheduler.py, tests/test_engine.py and examples/cim_serve.py.
 """
 from __future__ import annotations
 
@@ -34,6 +37,8 @@ import numpy as np
 from ..configs import ARCHS, get_config
 from ..data import DataConfig, batch_at
 from ..models import lm
+from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
+                        sampling_key)
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
@@ -52,8 +57,11 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
                       n_frontend_tokens=cfg.n_frontend_tokens
                       if cfg.family == "vlm" else 0,
                       d_model=cfg.d_model)
-    key = jax.random.PRNGKey(seed)
-    params, _ = lm.init(key, cfg)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    # sampling draws from its own stream -- the decode loop used to split
+    # the params-init key, so init and sampling consumed the same PRNG
+    # stream (regression-tested in tests/test_scheduler.py)
+    skey = sampling_key(seed)
     b = batch_at(dcfg, 0)
     tokens = jnp.asarray(b["tokens"])
     fe = (jnp.asarray(b["frontend_embs"]).astype(jnp.bfloat16)
@@ -66,7 +74,8 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
             jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params))
         t_pack = time.time() - t0
 
-    max_seq = prompt_len + gen + (fe.shape[1] if fe is not None else 0)
+    n_frontend = fe.shape[1] if fe is not None else 0
+    max_seq = prompt_len + gen + n_frontend
     cache = lm.init_cache(cfg, batch, max_seq)
     # AOT-compile both steps so every reported time is pure execution
     # (trace+compile otherwise dominates prefill_s at smoke scale and any
@@ -82,9 +91,22 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
                      donate_argnums=(2,)).lower(params, tok0, cache).compile()
     t_compile = time.time() - t0
 
+    def sample(logits):
+        """One token per row: greedy at temperature 0, else categorical.
+        The key split happens only when sampling -- a greedy run must not
+        pay per-token split dispatches inside the timed decode loop."""
+        nonlocal skey
+        if temperature > 0:
+            skey, sub = jax.random.split(skey)
+            return jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+        return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
     t0 = time.time()
     logits, cache = prefill(params, tokens, cache, fe)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    # the first generated token goes through the same sampler as the rest
+    # (it used to be unconditionally greedy while later tokens sampled)
+    tok = sample(logits)
     tok.block_until_ready()
     t_prefill = time.time() - t0
 
@@ -92,12 +114,7 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     t0 = time.time()
     for i in range(gen - 1):
         logits, cache = decode(params, tok, cache)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        tok = sample(logits)
         out.append(tok)
     gen_tokens = np.asarray(jnp.concatenate(out, axis=1))
     t_decode = time.time() - t0
@@ -105,6 +122,9 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     decode_steps = gen - 1
     decode_tok_s = (batch * decode_steps / t_decode
                     if decode_steps and t_decode > 0 else float("nan"))
+    # the prefill forward covers frontend embeddings too (vlm prepends
+    # n_frontend_tokens) -- count the true prefill length, not just text
+    prefill_len = prompt_len + n_frontend
     stats = dict(
         arch=arch, batch=batch, prompt_len=prompt_len, gen=gen,
         cim=cim, packed=pack,
@@ -113,7 +133,7 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
         prefill_s=round(t_prefill, 4),
         decode_s=round(t_decode, 4),
         decode_tok_s=round(decode_tok_s, 2),
-        prefill_tok_s=round(batch * prompt_len / t_prefill, 2)
+        prefill_tok_s=round(batch * prefill_len / t_prefill, 2)
         if t_prefill > 0 else float("nan"),
     )
     mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
@@ -126,22 +146,106 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     return gen_tokens
 
 
+def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
+                     prompt_len: int = 16, n_requests: int = 8,
+                     stop_lengths=(4, 16, 8, 12), cim: bool = False,
+                     pack: bool = True, temperature: float = 0.0,
+                     seed: int = 0, compare_lockstep: bool = True,
+                     repeats: int = 1):
+    """Continuous-batching driver: a mixed-length request queue served
+    from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
+
+    Returns (tokens_by_rid, stats).  With ``compare_lockstep=True`` the
+    same requests also run through the lock-step wave baseline on the SAME
+    compiled executables and the per-request tokens are asserted
+    bit-identical -- the scheduler may only reorder work, never change it.
+    ``repeats`` reruns both drivers and keeps each one's best run
+    (throughput numbers are best-of; host scheduler noise at smoke scale
+    otherwise swamps the comparison).
+    """
+    cfg = get_config(arch, smoke=smoke)
+    if cim:
+        cfg = dataclasses.replace(cfg, cim_mode=True)
+    pack = pack and cim
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    t_pack = 0.0
+    if pack:
+        t0 = time.time()
+        params = jax.block_until_ready(
+            jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params))
+        t_pack = time.time() - t0
+
+    requests = mixed_length_requests(n_requests, prompt_len, cfg.vocab_size,
+                                     stop_lengths=stop_lengths, seed=seed)
+    t0 = time.time()
+    sched = ContinuousBatchingScheduler(
+        params, cfg, slots=slots, prompt_len=prompt_len,
+        max_new_cap=max(stop_lengths), temperature=temperature, seed=seed)
+    sched.compile_for(n_requests, lockstep=compare_lockstep)
+    t_compile = time.time() - t0
+
+    runs = [sched.run(requests) for _ in range(repeats)]
+    for other in runs[1:]:
+        got, want = other.tokens_by_rid(), runs[0].tokens_by_rid()
+        for rid in want:
+            np.testing.assert_array_equal(got[rid], want[rid])
+    report = max(runs, key=lambda r: r.tok_s)
+    stats = dict(arch=arch, slots=slots, prompt_len=prompt_len,
+                 n_requests=n_requests, stop_lengths=list(stop_lengths),
+                 cim=cim, packed=pack, compile_s=round(t_compile, 4),
+                 pack_s=round(t_pack, 4), repeats=repeats,
+                 continuous=report.summary())
+    if compare_lockstep:
+        base_runs = [sched.run_lockstep(requests) for _ in range(repeats)]
+        base = max(base_runs, key=lambda r: r.tok_s)
+        got, want = report.tokens_by_rid(), base.tokens_by_rid()
+        for rid in want:
+            np.testing.assert_array_equal(
+                got[rid], want[rid],
+                err_msg=f"request {rid}: continuous batching changed tokens "
+                        "vs the lock-step baseline")
+        stats["lockstep"] = base.summary()
+        stats["tokens_match_lockstep"] = True
+        stats["speedup_vs_lockstep"] = round(
+            report.tok_s / base.tok_s, 2) if base.tok_s > 0 else float("nan")
+    mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
+    line = (f"[serve-cb] {arch} ({mode}): {n_requests} reqs x "
+            f"stops{tuple(stop_lengths)} over {slots} slots | "
+            f"{report.tok_s:.1f} tok/s, occupancy {report.occupancy:.0%}")
+    if compare_lockstep:
+        line += (f" | lock-step {stats['lockstep']['tok_s']:.1f} tok/s "
+                 f"({stats['speedup_vs_lockstep']:.2f}x, tokens identical)")
+    print(line)
+    return report.tokens_by_rid(), stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, required=True)
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=True, help="--no-smoke runs the full-size arch")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lock-step batch / continuous slot count")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cim", action="store_true")
     ap.add_argument("--no-pack", dest="pack", action="store_false",
                     help="legacy per-call weight conditioning (baseline)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a mixed-length queue")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="(--continuous) queued request count")
     args = ap.parse_args()
-    serve(args.arch, smoke=args.smoke, batch=args.batch,
-          prompt_len=args.prompt_len, gen=args.gen, cim=args.cim,
-          temperature=args.temperature, pack=args.pack)
+    if args.continuous:
+        serve_continuous(args.arch, smoke=args.smoke, slots=args.batch,
+                         prompt_len=args.prompt_len,
+                         n_requests=args.requests, cim=args.cim,
+                         pack=args.pack, temperature=args.temperature)
+    else:
+        serve(args.arch, smoke=args.smoke, batch=args.batch,
+              prompt_len=args.prompt_len, gen=args.gen, cim=args.cim,
+              temperature=args.temperature, pack=args.pack)
 
 
 if __name__ == "__main__":

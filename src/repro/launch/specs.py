@@ -126,7 +126,7 @@ _CACHE_AXES = {
     "ssm": ("layers", "batch", "ssm_heads", "head_dim", "state"),
     "conv_x": ("layers", "batch", "conv", "ssm_inner"),
     "conv_bc": ("layers", "batch", "conv", "state2"),
-    "pos": (),
+    "pos": ("batch",),   # per-slot positions; tiny -> kept replicated below
 }
 
 

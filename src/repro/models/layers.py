@@ -359,21 +359,31 @@ def attention_apply(
     positions: Array,               # (B, S)
     is_local,                       # scalar bool (traced ok)
     kv_cache: Optional[Tuple[Array, Array]] = None,  # (B,Smax,Hkv,Dh) x2
-    cache_pos: Optional[Array] = None,               # scalar: write index
+    cache_pos: Optional[Array] = None,               # (B,): per-slot write idx
     n_prefix: int = 0,
     return_kv: bool = False,
 ):
-    """Returns (out (B,S,D), new_kv or None)."""
+    """Returns (out (B,S,D), new_kv or None).
+
+    ``cache_pos`` is a per-slot ``(B,)`` vector: each batch row writes its
+    S new KV entries at its own position (continuous batching -- slots sit
+    at different depths), and each row's validity horizon is its own
+    ``cache_pos + S``.
+    """
     B, S, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions)
     new_kv = None
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+
+        def row_write(c, u, s):
+            return jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+
+        ck = jax.vmap(row_write)(ck, k.astype(ck.dtype), cache_pos)
+        cv = jax.vmap(row_write)(cv, v.astype(cv.dtype), cache_pos)
         new_kv = (ck, cv)
         k_pos = jnp.broadcast_to(jnp.arange(ck.shape[1])[None, :], (B, ck.shape[1]))
-        valid = k_pos < (cache_pos + S)
+        valid = k_pos < (cache_pos[:, None] + S)
         k_pos = jnp.where(valid, k_pos, 10 ** 9)  # mask out unwritten slots
         k_full, v_full = ck, cv
     else:

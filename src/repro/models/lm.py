@@ -5,7 +5,14 @@ One functional model with four entry points:
   init(key, cfg)                          -> (params, axes)
   forward(params, cfg, tokens, ...)       -> logits, aux      (train path)
   prefill(params, cfg, tokens, cache)     -> logits, cache    (inference)
-  decode_step(params, cfg, token, cache)  -> logits, cache    (inference)
+  decode_step(params, cfg, token, cache, live=None)
+                                          -> logits, cache    (inference)
+  prefill_into_slot(params, cfg, tokens, cache, slot)
+                                          -> logits, cache    (serving)
+
+The decode cache tracks a per-slot ``(batch,)`` position vector, and
+``reset_slot`` / ``prefill_into_slot`` give the continuous-batching
+scheduler (launch/scheduler.py) slot-level admission into a shared pool.
 
 Layer stacks are scanned (stacked params, jax.lax.scan) so compile time is
 depth-independent -- required for 40-cell dry-runs on CPU and the right
@@ -290,8 +297,13 @@ def _ssm_stack(params, cfg: ModelConfig, x, positions, remat,
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                dtype=jnp.bfloat16) -> Dict[str, Array]:
-    """Allocate the decode cache for `batch` sequences of up to `max_seq`."""
-    c: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    """Allocate the decode cache for `batch` sequences of up to `max_seq`.
+
+    ``pos`` is a per-slot ``(batch,)`` vector: every sequence in the pool
+    tracks its own write position, so slots at different depths (continuous
+    batching, launch/scheduler.py) share one cache and one compiled step.
+    """
+    c: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
     hkv, dh = cfg.padded_kv_heads, cfg.head_dim
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         shape = (cfg.n_layers, batch, max_seq, hkv, dh)
@@ -312,6 +324,64 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 # ---------------------------------------------------------------------------
+# slot-level cache ops (continuous batching, launch/scheduler.py)
+# ---------------------------------------------------------------------------
+# Every cache entry carries the pool (batch) dimension at axis 1 -- they are
+# stacked per layer/group -- except "pos", which is the (batch,) position
+# vector itself.  ``slot`` may be a traced scalar, so one compiled
+# reset/refill executable serves every slot in the pool.
+
+
+def _slot_axis(key: str) -> int:
+    return 0 if key == "pos" else 1
+
+
+def slot_slice(cache: Dict, slot) -> Dict:
+    """Extract a batch-1 view of one pool slot (same structure, batch=1)."""
+    return {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, _slot_axis(k))
+            for k, v in cache.items()}
+
+
+def slot_update(cache: Dict, sub: Dict, slot) -> Dict:
+    """Write a batch-1 sub-cache back into pool slot ``slot``."""
+    return {k: jax.lax.dynamic_update_slice_in_dim(
+        cache[k], sub[k].astype(cache[k].dtype), slot, _slot_axis(k))
+        for k in cache}
+
+
+def _zeroed_slot(cache: Dict, slot) -> Dict:
+    """A zeroed batch-1 sub-cache for ``slot`` -- the reset state.
+
+    KV rows do not strictly need zeroing -- the attention validity mask
+    hides everything at or beyond ``pos`` -- but SSM/conv state feeds the
+    recurrence as an initial value, so a freed slot MUST be cleared before
+    its next prefill.  One op clears both uniformly.
+    """
+    return jax.tree.map(jnp.zeros_like, slot_slice(cache, slot))
+
+
+def reset_slot(cache: Dict, slot) -> Dict:
+    """Zero one slot's state (KV rows, SSM/conv state, position)."""
+    return slot_update(cache, _zeroed_slot(cache, slot), slot)
+
+
+def prefill_into_slot(params, cfg: ModelConfig, tokens: Array, cache: Dict,
+                      slot, frontend_embs: Optional[Array] = None
+                      ) -> Tuple[Array, Dict]:
+    """Prefill ONE request (tokens (1, P)) into pool slot ``slot``.
+
+    The slot is reset, the prompt runs a batch-1 prefill against the
+    slot-sliced cache, and the result is scattered back -- other slots'
+    state is untouched, shapes are static, and ``slot`` may be traced, so
+    the scheduler refills any freed slot through one AOT-compiled
+    executable without recompiling.
+    """
+    logits, sub = prefill(params, cfg, tokens, _zeroed_slot(cache, slot),
+                          frontend_embs)
+    return logits, slot_update(cache, sub, slot)
+
+
+# ---------------------------------------------------------------------------
 # inference: prefill + decode
 # ---------------------------------------------------------------------------
 
@@ -328,27 +398,34 @@ def prefill(params, cfg: ModelConfig, tokens: Array, cache: Dict,
         x, cache = _ssm_stack_cached(params, cfg, x, positions, cache,
                                      decode=False)
     else:
+        pos0 = jnp.zeros((B,), jnp.int32)
         def body(x, scanned):
             blk, is_local, ck, cv = scanned
             x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
-                                       kv=(ck, cv), cache_pos=jnp.int32(0),
+                                       kv=(ck, cv), cache_pos=pos0,
                                        n_prefix=n_prefix)
             return x, new_kv
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
         cache["k"], cache["v"] = ck, cv
-    cache["pos"] = jnp.int32(S)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
     logits = _logits(params, cfg, x[:, -1:, :])
     return logits, cache
 
 
-def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict
-                ) -> Tuple[Array, Dict]:
-    """token (B, 1) -> logits (B, 1, V); cache advanced by one position."""
+def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
+                live: Optional[Array] = None) -> Tuple[Array, Dict]:
+    """token (B, 1) -> logits (B, 1, V); cache advanced by one position.
+
+    Each slot decodes at its own ``cache["pos"]`` entry.  ``live`` ((B,)
+    bool) freezes finished slots: their position does not advance, so a
+    dead slot idles at a fixed depth until the scheduler refills it
+    (``prefill_into_slot``) -- its logits are computed but discarded.
+    """
     x = jnp.take(params["embed"], token, axis=0)
     B = x.shape[0]
     pos = cache["pos"]
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    positions = pos[:, None].astype(jnp.int32)
     cache = dict(cache)
 
     if cfg.family in ("ssm", "hybrid"):
@@ -363,7 +440,8 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
         cache["k"], cache["v"] = ck, cv
-    cache["pos"] = pos + 1
+    adv = jnp.int32(1) if live is None else live.astype(jnp.int32)
+    cache["pos"] = pos + adv
     return _logits(params, cfg, x), cache
 
 
@@ -403,7 +481,7 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
         x, kv, _ = _attn_block(
             params["shared"], x, cfg, positions, jnp.bool_(False),
             kv=(cache["shared_k"][g], cache["shared_v"][g]),
-            cache_pos=pos if decode else jnp.int32(0))
+            cache_pos=pos if decode else jnp.zeros_like(pos))
         new_k.append(kv[0]); new_v.append(kv[1])
         done = (g + 1) * period
     if done < cfg.n_layers:
