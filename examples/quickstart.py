@@ -56,3 +56,33 @@ print(f"\nvs prior approaches: area -{s['area_pct_vs_duplicated']:.0f}% "
       f"(paper -35%), latency -{s['latency_pct_vs_sequential']:.0f}% "
       f"(paper -54%), power -{s['power_pct_vs_duplicated']:.0f}% "
       f"(paper -24%)")
+
+# --- the D/A split as a deployment knob: plan -> pack -> serve ------------
+# Profile each projection's noise sensitivity, knapsack-search a per-
+# projection CCIMConfig assignment (digital where it hurts, cheap analog
+# splits where it doesn't), then serve the planned model -- each weight
+# matrix packed once under ITS OWN macro config, zero recompiles.
+import dataclasses
+
+from repro import plan as P
+from repro.configs import get_config
+from repro.launch.serve import serve
+from repro.models import lm
+
+mcfg = get_config("minicpm-2b", smoke=True)
+params, _ = lm.init(jax.random.PRNGKey(0), mcfg)
+toks = P.calibration_batch(mcfg, batch=1, seq_len=16)
+cands = [P.digital_candidate(), P.prototype_candidate(),
+         P.make_candidate("hybrid3/adc8/L32",
+                          dataclasses.replace(cfg, acc_len=32, adc_bits=8))]
+res = P.pareto_search(params, mcfg, toks, candidates=cands)  # profile+search
+print("\ndeployment plan (projection -> design point):")
+for site, label in res.assignment.items():
+    print(f"  {site:10s} -> {label}")
+print(f"planned rms {res.measured_rms:.4f} (budget {res.budget_measured:.4f}"
+      f" = the global prototype config), modeled cost "
+      f"{res.cost['combined']:.3f} vs {res.cost_budget_plan['combined']:.3f}"
+      " global / 1.0 all-digital")
+tokens = serve("minicpm-2b", batch=2, prompt_len=16, gen=8, plan=res.plan,
+               pack=True)   # pack-once -> mixed-fidelity serve, AOT-compiled
+print("served tokens through the planned model:", tokens[0])

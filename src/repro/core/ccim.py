@@ -216,9 +216,18 @@ def quantize_smf(x: Array, scale: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> Ar
 
 def smf_scale(x: Array, axis=None, keepdims: bool = False,
               cfg: CCIMConfig = DEFAULT_CONFIG) -> Array:
-    """Symmetric max-abs scale so that max |q| = 127."""
+    """Symmetric max-abs scale so that max |q| = 127.
+
+    The fold is written as a multiply by the precomputed reciprocal
+    rather than ``amax / max_mag``: XLA's jit simplifier rewrites
+    divide-by-constant into exactly this multiply, so the explicit form
+    makes the scale BIT-IDENTICAL between eager and jit execution (it
+    used to differ by one ulp, which could flip a rounded magnitude --
+    the old PR-3 eager-vs-jit packing caveat).
+    """
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
-    return jnp.maximum(amax, 1e-12) / cfg.max_mag
+    inv = np.float32(1.0) / np.float32(cfg.max_mag)
+    return jnp.maximum(amax, 1e-12) * inv
 
 
 def split_sign_mag(q: Array) -> Tuple[Array, Array]:

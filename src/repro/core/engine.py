@@ -33,6 +33,7 @@ capacitor array makes in silicon.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -42,7 +43,7 @@ from .ccim import (
     CCIMConfig,
     DEFAULT_CONFIG,
     MacroInstance,
-    _kernel_numerics_match,
+    _dcim_by_j,
     _pad_to_chunks,
     cim_matmul_int,
     fold_dcim_planes,
@@ -116,12 +117,18 @@ jax.tree_util.register_dataclass(
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def pack_quantized_cim_weights(
     wq: Array,                        # (K, N) ints in [-127, 127]
     scale: Array,                     # the smf_scale the ints were made with
     cfg: CCIMConfig = DEFAULT_CONFIG,
 ) -> PackedCimWeights:
-    """Pack already-quantized integer weights (the array-write step)."""
+    """Pack already-quantized integer weights (the array-write step).
+
+    jit-compiled with ``cfg`` static: eager and traced callers share one
+    fused scale/decompose pipeline, so packs are bit-identical however
+    packing is invoked (eager packing used to differ in the last ulp).
+    """
     from ..kernels.ccim_matmul.ops import pick_weight_blocks
 
     K, N = wq.shape
@@ -136,11 +143,14 @@ def pack_quantized_cim_weights(
     gemm_w = chunk(wq).astype(jnp.float32)
     gemm_planes = tuple(chunk(p).astype(jnp.float32) for p in planes)
 
-    # Pallas layout: block-padded once (M-independent by construction)
-    _, _, Np, Kp = pick_weight_blocks(K, N)
+    # Pallas layout: block-padded once (M-independent by construction);
+    # the pad geometry follows the config's accumulate length, and an
+    # all-analog split (n_dcim_products=0) simply has zero folded planes
+    _, _, Np, Kp = pick_weight_blocks(K, N, cfg.acc_len)
     blockpad = lambda v: jnp.pad(v, ((0, Kp - K), (0, Np - N))).astype(jnp.int8)
     pallas_w = blockpad(wq)
-    pallas_planes = jnp.stack([blockpad(p) for p in planes])
+    pallas_planes = (jnp.stack([blockpad(p) for p in planes]) if planes
+                     else jnp.zeros((0, Kp, Np), jnp.int8))
 
     return PackedCimWeights(
         scale=scale,
@@ -156,6 +166,7 @@ def pack_quantized_cim_weights(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "per_channel"))
 def pack_cim_weights(
     w: Array,                         # (K, N) float weights
     cfg: CCIMConfig = DEFAULT_CONFIG,
@@ -165,6 +176,7 @@ def pack_cim_weights(
 
     Matches ``cim_matmul``'s weight conditioning exactly (same scale, same
     rounding), so packed and unpacked execution are bit-identical.
+    jit-compiled by default (cfg static) -- see pack_quantized_cim_weights.
     """
     w = w.astype(jnp.float32)
     sw = (smf_scale(w, axis=0, keepdims=True, cfg=cfg) if per_channel
@@ -172,6 +184,7 @@ def pack_cim_weights(
     return pack_quantized_cim_weights(quantize_smf(w, sw, cfg), sw, cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def pack_complex_cim_weights(
     w_re: Array, w_im: Array,         # (K, N) float weights
     cfg: CCIMConfig = DEFAULT_CONFIG,
@@ -191,6 +204,19 @@ def pack_complex_cim_weights(
 # ---------------------------------------------------------------------------
 # Packed execution (the serve-many step)
 # ---------------------------------------------------------------------------
+
+
+def _prepacked_kernel_supported(cfg: CCIMConfig) -> bool:
+    """Configs the GENERALIZED prepacked Pallas kernel can serve: the D/A
+    split, ADC width and accumulate length ride in as static meta, so any
+    deployment-plan design point qualifies -- the remaining constraints
+    are the int8 storage format (7 magnitude bits, folded plane values
+    <= 7 for splits up to top-6) and a block-divisible accumulate length.
+    """
+    d = DEFAULT_CONFIG
+    return (cfg.n_mag_bits == d.n_mag_bits
+            and cfg.n_dcim_products <= 6
+            and cfg.acc_len in (8, 16, 32, 64))
 
 
 def packed_cim_matmul_int(
@@ -213,15 +239,18 @@ def packed_cim_matmul_int(
             "they are being served with (plane fold and chunk layout are "
             f"config-specific): packed for {packed.cfg}, serving {cfg}. "
             "Re-pack the weights for the serving config.")
-    if fidelity == "fast" and noise_key is None and _kernel_numerics_match(cfg):
+    if (fidelity == "fast" and noise_key is None
+            and _prepacked_kernel_supported(cfg)):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         if use_pallas:
             from ..kernels.ccim_matmul.ops import ccim_matmul_int_prepacked
             return ccim_matmul_int_prepacked(
-                x_q, packed.pallas_w,
-                packed.pallas_planes[0], packed.pallas_planes[1],
-                k_dim=packed.k_dim, n_dim=packed.n_dim, use_pallas=True)
+                x_q, packed.pallas_w, packed.pallas_planes,
+                k_dim=packed.k_dim, n_dim=packed.n_dim,
+                acc_len=cfg.acc_len, x_bits=tuple(_dcim_by_j(cfg)),
+                dcim_lsb=cfg.dcim_lsb, adc_bits=cfg.adc_bits,
+                use_pallas=True)
     if fidelity == "fast":
         C = packed.gemm_w.shape[0]
         pad = C * cfg.acc_len - K

@@ -89,47 +89,61 @@ def _ccim_kernel(x_ref, w_ref, o_ref, acc_ref, *, bk: int, n_k: int):
         o_ref[...] = acc_ref[...]
 
 
-def _ccim_kernel_prepacked(x_ref, w_ref, w6_ref, w5_ref, o_ref, acc_ref,
-                           *, bk: int, n_k: int):
-    """Prepacked-weight variant: the folded signed MSB planes of w arrive
-    as kernel inputs (packed once, off the hot path -- weight-stationary,
-    as bit-cells in the silicon array), so the per-step weight work drops
-    to zero and dcim needs 2 plane dots instead of 3:
+def _ccim_kernel_prepacked(*refs, bk: int, n_k: int, acc_len: int,
+                           x_bits: tuple, dcim_lsb: int, adc_half: int):
+    """Prepacked-weight variant, generalized over the macro's D/A split.
 
-        w6_ref holds s_w * (2*b6(|w|) + b5(|w|))   (pairs with x bit 6)
-        w5_ref holds s_w * b6(|w|)                 (pairs with x bit 5)
+    The folded signed DCIM planes of w arrive as ONE stacked kernel input
+    (packed once, off the hot path -- weight-stationary, as bit-cells in
+    the silicon array), so the per-step weight work drops to zero.  The
+    split itself is STATIC META: ``x_bits`` lists the activation bit-plane
+    index each folded weight plane pairs with (the deployment planner's
+    per-projection ``n_dcim_products`` choice determines the plane count),
+    and ``dcim_lsb``/``adc_half``/``acc_len`` carry the matching ADC
+    geometry.  For the 28nm prototype (top-3 split) this is x_bits=(6, 5):
 
-    Integer arithmetic is unchanged, so outputs stay bit-identical to
-    ``_ccim_kernel`` on the same operands.
+        plane 0 holds s_w * (2*b6(|w|) + b5(|w|))   (pairs with x bit 6)
+        plane 1 holds s_w * b6(|w|)                 (pairs with x bit 5)
+
+    and the arithmetic is bit-identical to ``_ccim_kernel``.  With
+    x_bits=() (all-analog split) there is NO planes input and every
+    bit-product goes through the ADC path.
     """
+    if x_bits:
+        x_ref, w_ref, planes_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.int32)            # (bm, bk)
     w = w_ref[...].astype(jnp.int32)            # (bk, bn)
-    wp6 = w6_ref[...].astype(jnp.int32)         # (bk, bn) folded plane, |.|<=3
-    wp5 = w5_ref[...].astype(jnp.int32)         # (bk, bn) folded plane, |.|<=1
     bm, bn = x.shape[0], w.shape[1]
-    c = bk // ACC_LEN
+    c = bk // acc_len
+
+    to_xc = lambda v: v.reshape(bm, c, acc_len).swapaxes(0, 1)  # (C, bm, L)
+    to_wc = lambda v: v.reshape(c, acc_len, bn)                 # (C, L, bn)
+    exact = _chunk_dot(to_xc(x), to_wc(w))
 
     # activation-side decomposition only (activations stream, as in silicon)
-    sx = jnp.where(x < 0, -1, 1)
-    mx = jnp.abs(x)
-    x6 = sx * ((mx >> 6) & 1)
-    x5 = sx * ((mx >> 5) & 1)
+    dcim = jnp.zeros_like(exact)
+    if x_bits:
+        sx = jnp.where(x < 0, -1, 1)
+        mx = jnp.abs(x)
+        planes = planes_ref[...].astype(jnp.int32)  # (n_planes, bk, bn)
+        for i, j in enumerate(x_bits):
+            xj = sx * ((mx >> j) & 1)
+            dcim = dcim + _chunk_dot(to_xc(xj), to_wc(planes[i]))
 
-    to_xc = lambda v: v.reshape(bm, c, ACC_LEN).swapaxes(0, 1)  # (C, bm, L)
-    to_wc = lambda v: v.reshape(c, ACC_LEN, bn)                 # (C, L, bn)
-    exact = _chunk_dot(to_xc(x), to_wc(w))
-    dcim = _chunk_dot(to_xc(x6), to_wc(wp6)) + _chunk_dot(to_xc(x5), to_wc(wp5))
-
-    acim = exact - dcim * DCIM_LSB
+    acim = exact - dcim * dcim_lsb
     code = jnp.clip(
-        jnp.floor_divide(acim + DCIM_LSB // 2, DCIM_LSB), -ADC_HALF, ADC_HALF - 1
+        jnp.floor_divide(acim + dcim_lsb // 2, dcim_lsb),
+        -adc_half, adc_half - 1,
     )
     y8 = dcim + code
-    acc_ref[...] += jnp.sum(y8, axis=0) * DCIM_LSB
+    acc_ref[...] += jnp.sum(y8, axis=0) * dcim_lsb
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
@@ -137,42 +151,56 @@ def _ccim_kernel_prepacked(x_ref, w_ref, w6_ref, w5_ref, o_ref, acc_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bm", "bn", "bk", "acc_len", "x_bits",
+                              "dcim_lsb", "adc_half", "interpret")
 )
 def ccim_matmul_prepacked_pallas(
     x_q: jax.Array,           # (M, K) int8, values in [-127, 127]
     w_q: jax.Array,           # (K, N) int8
-    w_p6: jax.Array,          # (K, N) int8 folded plane s*(2*b6+b5)
-    w_p5: jax.Array,          # (K, N) int8 folded plane s*b6
+    planes: jax.Array,        # (n_planes, K, N) int8 folded DCIM planes
     *,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    acc_len: int = ACC_LEN,
+    x_bits: tuple = (6, 5),
+    dcim_lsb: int = DCIM_LSB,
+    adc_half: int = ADC_HALF,
     interpret: bool = False,
 ) -> jax.Array:
-    """Prepacked-weight hybrid-CIM GEMM -> (M, N) int32 at scale 2^11."""
+    """Prepacked-weight hybrid-CIM GEMM -> (M, N) int32 at scale dcim_lsb.
+
+    ``x_bits``/``dcim_lsb``/``adc_half``/``acc_len`` are static meta
+    describing the packed D/A split (see ``_ccim_kernel_prepacked``); the
+    defaults are the 28nm prototype's top-3 split.
+    """
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2
-    assert w_p6.shape == (K, N) and w_p5.shape == (K, N)
+    assert planes.shape == (len(x_bits), K, N), (planes.shape, x_bits)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    assert bk % ACC_LEN == 0
+    assert bk % acc_len == 0
     n_k = K // bk
 
-    kernel = functools.partial(_ccim_kernel_prepacked, bk=bk, n_k=n_k)
-    w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    kernel = functools.partial(
+        _ccim_kernel_prepacked, bk=bk, n_k=n_k, acc_len=acc_len,
+        x_bits=tuple(x_bits), dcim_lsb=dcim_lsb, adc_half=adc_half)
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))]
+    operands = [x_q, w_q]
+    if x_bits:
+        in_specs.append(pl.BlockSpec((len(x_bits), bk, bn),
+                                     lambda i, j, k: (0, k, j)))
+        operands.append(planes)
     return pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            w_spec, w_spec, w_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, w_p6, w_p5)
+    )(*operands)
 
 
 @functools.partial(

@@ -45,37 +45,49 @@ def _pick_k_block(c: int, preferred: int = 32) -> int:
     return b
 
 
-def pick_gemm_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
-    """(bm, bn, bk) for an (M, K) x (K, N) macro GEMM; K in ACC_LEN chunks."""
+def pick_gemm_blocks(M: int, N: int, K: int,
+                     acc_len: int = ACC_LEN) -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M, K) x (K, N) macro GEMM; K in acc_len chunks."""
     bm, bn = _pick_block(M, 128), _pick_block(N, 128)
-    bk = _pick_k_block(_pad_to(K, ACC_LEN) // ACC_LEN) * ACC_LEN
+    bk = _pick_k_block(_pad_to(K, acc_len) // acc_len) * acc_len
     return bm, bn, bk
 
 
-def pick_weight_blocks(K: int, N: int) -> tuple[int, int, int, int]:
+def pick_weight_blocks(K: int, N: int,
+                       acc_len: int = ACC_LEN) -> tuple[int, int, int, int]:
     """(bn, bk, Np, Kp) weight-side block selection and padded dims.
 
     Deliberately M-independent (bm only shapes the activation tile), so a
     weight matrix can be padded ONCE at pack time and reused for every
-    activation batch shape -- the weight-stationary contract.
+    activation batch shape -- the weight-stationary contract.  ``acc_len``
+    is the packed config's accumulate length (the deployment planner
+    assigns non-prototype lengths per projection).
     """
     bn = _pick_block(N, 128)
-    bk = _pick_k_block(_pad_to(K, ACC_LEN) // ACC_LEN) * ACC_LEN
-    return bn, bk, _pad_to(N, bn), _pad_to(_pad_to(K, ACC_LEN), bk)
+    bk = _pick_k_block(_pad_to(K, acc_len) // acc_len) * acc_len
+    return bn, bk, _pad_to(N, bn), _pad_to(_pad_to(K, acc_len), bk)
 
 
 def ccim_matmul_int_prepacked(
     x_q: jax.Array,           # (M, K) ints in [-127, 127]
     w_q: jax.Array,           # (Kp, Np) int8, block-padded at pack time
-    w_p6: jax.Array,          # (Kp, Np) int8 folded plane s*(2*b6+b5)
-    w_p5: jax.Array,          # (Kp, Np) int8 folded plane s*b6
+    planes: jax.Array,        # (n_planes, Kp, Np) int8 folded DCIM planes
     *,
     k_dim: int, n_dim: int,
+    acc_len: int = ACC_LEN,
+    x_bits: tuple = (6, 5),
+    dcim_lsb: int = DCIM_LSB,
+    adc_bits: int = 7,
     use_pallas: bool | None = None, interpret: bool | None = None,
 ) -> jax.Array:
     """Prepacked-weight macro GEMM: only the activations are padded and
-    decomposed per call.  Bit-identical to ``ccim_matmul_int`` on the raw
-    integer weights the pack was built from."""
+    decomposed per call.  Bit-identical to ``cim_matmul_int`` (fast
+    fidelity, noise-free) on the raw integer weights the pack was built
+    from.  The packed D/A split rides in as static meta -- ``x_bits`` (one
+    activation bit index per folded plane; the plane COUNT is the plan's
+    ``n_dcim_products`` grouped by x bit), ``dcim_lsb``, ``adc_bits`` and
+    ``acc_len`` -- so one kernel serves every deployment-plan design point.
+    """
     on_tpu = jax.default_backend() == "tpu"
     if use_pallas is None:
         use_pallas = on_tpu
@@ -83,9 +95,16 @@ def ccim_matmul_int_prepacked(
         interpret = not on_tpu
     M, K = x_q.shape
     assert K == k_dim, (K, k_dim)
-    bn, bk, Np, Kp = pick_weight_blocks(k_dim, n_dim)
+    bn, bk, Np, Kp = pick_weight_blocks(k_dim, n_dim, acc_len)
     assert w_q.shape == (Kp, Np), (w_q.shape, Kp, Np)
     if not use_pallas:
+        default = (acc_len == ACC_LEN and tuple(x_bits) == (6, 5)
+                   and dcim_lsb == DCIM_LSB and adc_bits == 7)
+        if not default:
+            raise ValueError(
+                "non-prototype D/A splits are served by the generalized "
+                "Pallas kernel (interpret mode off-TPU); pass "
+                "use_pallas=True")
         xp = jnp.pad(x_q, ((0, 0), (0, Kp - K)))
         return ccim_matmul_ref(xp.astype(jnp.int32),
                                w_q.astype(jnp.int32))[:, :n_dim]
@@ -93,8 +112,9 @@ def ccim_matmul_int_prepacked(
     Mp = _pad_to(M, bm)
     xp = jnp.pad(x_q, ((0, Mp - M), (0, Kp - K)))
     y = ccim_matmul_prepacked_pallas(
-        xp.astype(jnp.int8), w_q, w_p6, w_p5,
-        bm=bm, bn=bn, bk=bk, interpret=interpret,
+        xp.astype(jnp.int8), w_q, planes,
+        bm=bm, bn=bn, bk=bk, acc_len=acc_len, x_bits=tuple(x_bits),
+        dcim_lsb=dcim_lsb, adc_half=1 << (adc_bits - 1), interpret=interpret,
     )
     return y[:M, :n_dim]
 

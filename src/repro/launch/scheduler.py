@@ -37,6 +37,16 @@ in, what shared the pool with it, or when it was admitted.  Sampling keys
 are folded per request id (``fold_in(sampling_key(seed), rid)``) and each
 slot consumes its own key stream one split per generated token, so even
 temperature sampling is bit-identical to a solo run.
+
+Mixed-fidelity deployment plans (repro.plan) serve through this scheduler
+UNCHANGED: a plan is static metadata on the ModelConfig, resolved inside
+``lm.prefill_into_slot``/``lm.decode_step`` at trace time, so the pool's
+AOT-compiled loop already embeds every projection's own macro config --
+zero recompiles across decode steps, per-layer D/A splits and all
+(tests/test_plan.py).  Caveat: deterministic noise emulation
+(cfg.cim_noise_seed) draws per POOL ROW, so noisy tokens depend on slot
+assignment -- like silicon, where each slot maps to a physical macro bank
+-- and the scheduler's slot-independence contract holds only noise-free.
 """
 from __future__ import annotations
 

@@ -43,12 +43,31 @@ from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
 
 def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, cim: bool = False, temperature: float = 0.0,
-          seed: int = 0, pack: bool = True, return_stats: bool = False):
+          seed: int = 0, pack: bool = True, return_stats: bool = False,
+          plan=None, noise_seed=None):
     """Returns generated tokens (batch, gen); with ``return_stats=True``,
     returns (tokens, stats) where stats separates compile / pack /
     prefill / decode time -- prefill and decode steps are AOT-compiled up
-    front, so every throughput number is pure execution."""
+    front, so every throughput number is pure execution.
+
+    ``plan`` (a repro.plan.DeploymentPlan) serves each projection under
+    its own macro config/fidelity (implies cim); plans are static, so the
+    AOT-compiled prefill/decode executables serve the mixed-fidelity model
+    with zero recompiles.  ``noise_seed`` turns on deterministic analog-
+    noise emulation (cfg.cim_noise_seed) -- packed and unpacked serving
+    stay bit-identical under it.
+    """
     cfg = get_config(arch, smoke=smoke)
+    if plan is not None:
+        cim = True
+        cfg = dataclasses.replace(cfg, cim_plan=plan)
+    if noise_seed is not None:
+        if not cim:
+            raise ValueError(
+                "noise_seed emulates the macro's analog noise and needs "
+                "cim=True (or a plan); without it serving would silently "
+                "run noise-free")
+        cfg = dataclasses.replace(cfg, cim_noise_seed=noise_seed)
     if cim:
         cfg = dataclasses.replace(cfg, cim_mode=True)
     pack = pack and cim
@@ -70,8 +89,10 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     t_pack = 0.0
     if pack:
         t0 = time.time()
-        params = jax.block_until_ready(
-            jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params))
+        # pack_cim_params is jit-compiled internally (eager == jit packs
+        # are bit-identical); under a plan each projection packs for its
+        # own entry's macro config
+        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
         t_pack = time.time() - t0
 
     n_frontend = fe.shape[1] if fe is not None else 0
@@ -151,7 +172,7 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                      stop_lengths=(4, 16, 8, 12), cim: bool = False,
                      pack: bool = True, temperature: float = 0.0,
                      seed: int = 0, compare_lockstep: bool = True,
-                     repeats: int = 1):
+                     repeats: int = 1, plan=None):
     """Continuous-batching driver: a mixed-length request queue served
     from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
 
@@ -161,9 +182,13 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     bit-identical -- the scheduler may only reorder work, never change it.
     ``repeats`` reruns both drivers and keeps each one's best run
     (throughput numbers are best-of; host scheduler noise at smoke scale
-    otherwise swamps the comparison).
+    otherwise swamps the comparison).  ``plan`` serves a mixed-fidelity
+    DeploymentPlan through the unchanged scheduler (implies cim).
     """
     cfg = get_config(arch, smoke=smoke)
+    if plan is not None:
+        cim = True
+        cfg = dataclasses.replace(cfg, cim_plan=plan)
     if cim:
         cfg = dataclasses.replace(cfg, cim_mode=True)
     pack = pack and cim
@@ -171,8 +196,7 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     t_pack = 0.0
     if pack:
         t0 = time.time()
-        params = jax.block_until_ready(
-            jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params))
+        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
         t_pack = time.time() - t0
 
     requests = mixed_length_requests(n_requests, prompt_len, cfg.vocab_size,

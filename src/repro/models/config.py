@@ -2,9 +2,12 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
 
 from ..core.ccim import CCIMConfig
+
+if TYPE_CHECKING:  # annotation only -- models must not import repro.plan
+    from ..plan.plan import DeploymentPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +68,19 @@ class ModelConfig:
     cim_fidelity: str = "fast"
     cim_cfg: Optional[CCIMConfig] = None   # None -> the 28nm prototype macro
     cim_use_pallas: Optional[bool] = None  # None -> auto (TPU backend only)
+    # Mixed-fidelity deployment plan (repro.plan): per-projection CCIMConfig
+    # + fidelity overriding the single global cim_cfg/cim_fidelity above.
+    # Static and hashable, resolved at trace time by layers._dense, so a
+    # planned model still compiles to one executable per step -- zero
+    # recompiles across decode steps.
+    cim_plan: Optional["DeploymentPlan"] = None
+    # Deterministic analog-noise emulation for CIM serving: when set, every
+    # _dense projection derives its own noise stream by folding this seed
+    # with the projection path (shared across scanned depth -- the same
+    # physical-bank reuse the weight-stationary macro has).  None keeps
+    # serving noise-free.  The profiler sets it so analog candidates are
+    # charged for their mismatch/comparator noise, not just rounding.
+    cim_noise_seed: Optional[int] = None
 
     # schedule hint (minicpm: WSD)
     lr_schedule: str = "cosine"        # "cosine" | "wsd"

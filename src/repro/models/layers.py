@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
@@ -36,30 +37,67 @@ Params = Dict[str, Any]
 # ---------------------------------------------------------------------------
 
 
-def cim_engine(cfg: ModelConfig) -> CimEngine:
+def cim_engine(cfg: ModelConfig, path: Optional[str] = None) -> CimEngine:
     """The execution engine a model config resolves to: macro config,
     fidelity and Pallas routing all come from the config (no module
-    globals), so two models in one process can run different macros."""
+    globals), so two models in one process can run different macros.
+
+    With a deployment plan (cfg.cim_plan, see repro.plan) the projection
+    ``path`` (e.g. "attn/wq") resolves to ITS OWN entry -- per-projection
+    macro config and fidelity -- at trace time; plans are static metadata,
+    so mixed-fidelity models still compile to one executable per step.
+    """
+    if cfg.cim_plan is not None and path is not None:
+        e = cfg.cim_plan.resolve(path)
+        return CimEngine(cfg=e.cfg, fidelity=e.fidelity,
+                         use_pallas=cfg.cim_use_pallas)
     return CimEngine(cfg=cfg.cim_cfg or DEFAULT_CONFIG,
                      fidelity=cfg.cim_fidelity,
                      use_pallas=cfg.cim_use_pallas)
 
 
-def _dense(x: Array, w, cfg: ModelConfig) -> Array:
+def _dense_noise_key(cfg: ModelConfig, path: Optional[str]) -> Optional[Array]:
+    """Per-projection deterministic analog-noise stream (cfg.cim_noise_seed).
+
+    The seed is folded with a hash of the projection path, so every
+    projection draws independent mismatch/comparator noise while staying
+    reproducible.  Scanned layer stacks share one path -- and therefore
+    one draw pattern across depth -- mirroring how the weight-stationary
+    macro reuses the same physical banks for every layer of a stack.
+    """
+    if cfg.cim_noise_seed is None:
+        return None
+    tag = zlib.crc32((path or "").encode("utf-8"))
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.cim_noise_seed), tag)
+
+
+def _dense(x: Array, w, cfg: ModelConfig, path: Optional[str] = None) -> Array:
     """x (..., K) @ w (K, N) -- through the macro when cim_mode is on.
 
     ``w`` may be a ``PackedCimWeights`` (prepacked array contents from
     ``lm.pack_cim_params``): then the macro runs unconditionally with
-    activation-only quantization on the hot path.
+    activation-only quantization on the hot path.  ``path`` identifies the
+    projection for the deployment plan (per-projection config/fidelity)
+    and the deterministic noise stream; plan fidelity "float" bypasses the
+    macro entirely.
     """
     if isinstance(w, PackedCimWeights):
         if not cfg.cim_mode:
             raise ValueError(
                 "packed CIM weights require cim_mode=True (packed params "
                 "are macro array contents, not float matrices)")
-        return cim_engine(cfg).matmul(x, w)
+        eng = cim_engine(cfg, path)
+        if eng.fidelity == "float":
+            raise ValueError(
+                f"plan assigns fidelity 'float' to {path!r} but its weights "
+                "are packed macro array contents; re-pack under the plan "
+                "(lm.pack_cim_params leaves float-fidelity sites unpacked)")
+        return eng.matmul(x, w, _dense_noise_key(cfg, path))
     if cfg.cim_mode:
-        return cim_engine(cfg).matmul(x, w)
+        eng = cim_engine(cfg, path)
+        if eng.fidelity == "float":
+            return x @ w
+        return eng.matmul(x, w, _dense_noise_key(cfg, path))
     return x @ w
 
 
@@ -195,13 +233,13 @@ def _head_constraints(q, k, v):
     return q, k, v
 
 
-def _qkv(p, x, cfg: ModelConfig, positions):
+def _qkv(p, x, cfg: ModelConfig, positions, path="attn"):
     B, S, _ = x.shape
     dh = cfg.head_dim
     hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
-    q = _dense(x, p["wq"], cfg).reshape(B, S, hq, dh)
-    k = _dense(x, p["wk"], cfg).reshape(B, S, hkv, dh)
-    v = _dense(x, p["wv"], cfg).reshape(B, S, hkv, dh)
+    q = _dense(x, p["wq"], cfg, f"{path}/wq").reshape(B, S, hq, dh)
+    k = _dense(x, p["wk"], cfg, f"{path}/wk").reshape(B, S, hkv, dh)
+    v = _dense(x, p["wv"], cfg, f"{path}/wv").reshape(B, S, hkv, dh)
     q, k, v = _head_constraints(q, k, v)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -362,16 +400,18 @@ def attention_apply(
     cache_pos: Optional[Array] = None,               # (B,): per-slot write idx
     n_prefix: int = 0,
     return_kv: bool = False,
+    path: str = "attn",
 ):
     """Returns (out (B,S,D), new_kv or None).
 
     ``cache_pos`` is a per-slot ``(B,)`` vector: each batch row writes its
     S new KV entries at its own position (continuous batching -- slots sit
     at different depths), and each row's validity horizon is its own
-    ``cache_pos + S``.
+    ``cache_pos + S``.  ``path`` is the deployment-plan projection prefix
+    (the zamba2 shared block passes "shared/attn").
     """
     B, S, _ = x.shape
-    q, k, v = _qkv(p, x, cfg, positions)
+    q, k, v = _qkv(p, x, cfg, positions, path)
     new_kv = None
     if kv_cache is not None:
         ck, cv = kv_cache
@@ -403,7 +443,7 @@ def attention_apply(
         # zero the TP-pad heads: keeps wo/wq pad slots at exactly zero
         # through training (their grads vanish here)
         out = out * mask[None, None, :, None].astype(out.dtype)
-    out = _dense(out.reshape(B, S, -1), p["wo"], cfg)
+    out = _dense(out.reshape(B, S, -1), p["wo"], cfg, f"{path}/wo")
     return out, new_kv
 
 
@@ -422,10 +462,11 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=jnp.bfloat
     return p, a
 
 
-def mlp_apply(p: Params, x: Array, cfg: ModelConfig) -> Array:
+def mlp_apply(p: Params, x: Array, cfg: ModelConfig, path: str = "mlp") -> Array:
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    h = act(_dense(x, p["w1"], cfg)) * _dense(x, p["w3"], cfg)
-    return _dense(h, p["w2"], cfg)
+    h = act(_dense(x, p["w1"], cfg, f"{path}/w1")) * _dense(
+        x, p["w3"], cfg, f"{path}/w3")
+    return _dense(h, p["w2"], cfg, f"{path}/w2")
 
 
 # ---------------------------------------------------------------------------
@@ -518,9 +559,11 @@ def _moe_grouped(p, x, eidx, gate_vals, cfg):
     return jnp.sum(yk.reshape(B, S, K, D), axis=2).reshape(B * S, D)
 
 
-def moe_apply(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+def moe_apply(p: Params, x: Array, cfg: ModelConfig,
+              path: str = "moe") -> Tuple[Array, Array]:
     """Returns (y, aux_loss). Experts shard over 'model' (EP); dispatch is
-    group-local so only the expert GEMM's buffers cross shards."""
+    group-local so only the expert GEMM's buffers cross shards.  ``path``
+    prefixes the shared expert's deployment-plan projection paths."""
     B, S, D = x.shape
     T = B * S
     E, K = cfg.n_experts, cfg.top_k
@@ -544,7 +587,8 @@ def moe_apply(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
     aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_loss
 
     if cfg.shared_expert_d_ff:
-        y = y + mlp_apply(p["shared"], x, cfg).reshape(T, D)
+        y = y + mlp_apply(p["shared"], x, cfg,
+                          path=f"{path}/shared").reshape(T, D)
     return y.reshape(B, S, D), aux
 
 
@@ -622,10 +666,10 @@ def mamba2_apply(p: Params, x: Array, cfg: ModelConfig,
     """x (B,S,D). Returns (y, (new_ssm_state, new_conv_state))."""
     B, S, D = x.shape
     DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    z = _dense(x, p["w_z"], cfg)
-    xc = _dense(x, p["w_x"], cfg)
-    BCc = _dense(x, p["w_bc"], cfg)
-    dt_raw = _dense(x, p["w_dt"], cfg)
+    z = _dense(x, p["w_z"], cfg, "mamba/w_z")
+    xc = _dense(x, p["w_x"], cfg, "mamba/w_x")
+    BCc = _dense(x, p["w_bc"], cfg, "mamba/w_bc")
+    dt_raw = _dense(x, p["w_dt"], cfg, "mamba/w_dt")
     cs_x = cs_bc = None
     if conv_state is not None:
         cs_x, cs_bc = conv_state
@@ -705,7 +749,7 @@ def mamba2_apply(p: Params, x: Array, cfg: ModelConfig,
 
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
-    out = _dense(y, p["out_proj"], cfg)
+    out = _dense(y, p["out_proj"], cfg, "mamba/out_proj")
     if not decode and S != S_orig:
         out = out[:, :S_orig]
     return out, (new_state, new_conv)

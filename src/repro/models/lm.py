@@ -136,6 +136,59 @@ _CIM_PACKABLE = frozenset({
 })
 
 
+def _walk_packable(tree, visit, path=()):
+    """Rebuild ``tree`` with ``visit(plan_path, leaf)`` applied to every
+    _dense-consumed projection leaf.  ``plan_path`` is the deployment-plan
+    path convention: tree keys joined with "/", the scanned-stack key
+    "layers" dropped (one entry covers every depth of a scanned stack) --
+    e.g. "attn/wq", "moe/shared/w1", "shared/mlp/w2", "mamba/out_proj".
+    MoE expert tensors reuse the w1/w2/w3 names but feed einsums, not
+    _dense, so the level directly under "moe" is skipped (the shared
+    expert under moe/shared IS packable).
+    """
+    out = {}
+    for k, v in tree.items():
+        sub = path if k == "layers" else path + (k,)
+        if isinstance(v, dict):
+            out[k] = _walk_packable(v, visit, sub)
+        elif k in _CIM_PACKABLE and not (len(path) >= 1 and path[-1] == "moe"):
+            out[k] = visit("/".join(sub), v)
+        else:
+            out[k] = v
+    return out
+
+
+def iter_packable_paths(params: Params) -> Dict[str, Tuple[int, ...]]:
+    """Deployment-plan path -> leaf shape for every _dense projection.
+
+    The planner's site list: each path is one plan-addressable projection
+    (scanned stacks appear once, with their (layers, K, N) stacked shape).
+    """
+    sites: Dict[str, Tuple[int, ...]] = {}
+
+    def visit(path, v):
+        sites[path] = tuple(v.shape)
+        return v
+
+    _walk_packable(params, visit)
+    return sites
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _pack_cim_params_jit(params: Params, cfg: ModelConfig) -> Params:
+    def pack_one(path, v):
+        eng = L.cim_engine(cfg, path)
+        if eng.fidelity == "float":          # plan keeps this site off-macro
+            return v
+        if v.ndim == 2:                      # (K, N): shared-block weights
+            return eng.pack(v)
+        if v.ndim == 3:                      # (layers, K, N): scanned stack
+            return jax.vmap(eng.pack)(v)
+        return v                             # MoE expert tensors etc.
+
+    return _walk_packable(params, pack_one)
+
+
 def pack_cim_params(params: Params, cfg: ModelConfig) -> Params:
     """Replace every _dense-consumed projection with PackedCimWeights.
 
@@ -145,33 +198,22 @@ def pack_cim_params(params: Params, cfg: ModelConfig) -> Params:
     quantization.  Stacked (scanned) layer weights are packed under vmap,
     so the packed leaves keep their leading layer axis and drop straight
     into the scanned stacks.  Bit-identical to unpacked cim_mode execution.
+
+    The packing pipeline is jit-compiled HERE (cfg is static): eager and
+    outer-jit callers get the same fused scale arithmetic, so the packed
+    leaves are bit-identical however packing is invoked (regression-tested
+    in tests/test_engine.py -- eager packing used to differ in the last
+    scale ulp, flipping occasional magnitudes).
+
+    Under a deployment plan (cfg.cim_plan, repro.plan) each projection
+    packs under ITS OWN entry's CCIMConfig -- the packed leaf carries that
+    config as static pytree metadata, so mixed packs coexist in one
+    compiled step -- and plan-fidelity "float" sites stay raw float
+    matrices (served as plain matmuls).
     """
     if not cfg.cim_mode:
         raise ValueError("pack_cim_params requires cfg.cim_mode=True")
-    eng = L.cim_engine(cfg)
-
-    def pack_leaf(v):
-        if v.ndim == 2:                      # (K, N): shared-block weights
-            return eng.pack(v)
-        if v.ndim == 3:                      # (layers, K, N): scanned stack
-            return jax.vmap(eng.pack)(v)
-        return v                             # MoE expert tensors etc.
-
-    def walk(tree, in_moe: bool):
-        out = {}
-        for k, v in tree.items():
-            if isinstance(v, dict):
-                # MoE expert tensors reuse the w1/w2/w3 names but feed
-                # einsums, not _dense; the shared expert under moe is a
-                # plain MLP and IS packable.
-                out[k] = walk(v, in_moe=(k == "moe"))
-            elif k in _CIM_PACKABLE and not in_moe:
-                out[k] = pack_leaf(v)
-            else:
-                out[k] = v
-        return out
-
-    return walk(params, in_moe=False)
+    return _pack_cim_params_jit(params, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -202,19 +244,24 @@ def _logits(p, cfg: ModelConfig, x: Array) -> Array:
 
 
 def _attn_block(blk, x, cfg, positions, is_local, kv=None, cache_pos=None,
-                n_prefix=0, return_kv=False):
+                n_prefix=0, return_kv=False, prefix=""):
+    """``prefix`` qualifies the deployment-plan projection paths: the
+    scanned per-layer stacks use "" (paths "attn/wq", "mlp/w1", ...), the
+    zamba2 shared block passes "shared/"."""
     h, new_kv = L.attention_apply(
         blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg, positions,
         is_local, kv_cache=kv, cache_pos=cache_pos, n_prefix=n_prefix,
-        return_kv=return_kv)
+        return_kv=return_kv, path=prefix + "attn")
     x = x + h
     if "moe" in blk:
-        h, aux = L.moe_apply(blk["moe"], L.rms_norm(x, blk["ln2"], cfg.norm_eps), cfg)
+        h, aux = L.moe_apply(blk["moe"], L.rms_norm(x, blk["ln2"], cfg.norm_eps),
+                             cfg, path=prefix + "moe")
         if "mlp" in blk:  # arctic: dense residual in parallel with MoE
-            h = h + L.mlp_apply(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps), cfg)
+            h = h + L.mlp_apply(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps),
+                                cfg, path=prefix + "mlp")
     elif "mlp" in blk:
         h, aux = L.mlp_apply(blk["mlp"], L.rms_norm(x, blk["ln2"], cfg.norm_eps)
-                             , cfg), jnp.float32(0.0)
+                             , cfg, path=prefix + "mlp"), jnp.float32(0.0)
     else:
         h, aux = 0.0, jnp.float32(0.0)
     return x + h, new_kv, aux
@@ -283,7 +330,7 @@ def _ssm_stack(params, cfg: ModelConfig, x, positions, remat,
         x, _ = jax.lax.scan(body, x, grp)
         done = (g + 1) * period
         x, _, _ = _attn_block(params["shared"], x, cfg, positions,
-                              jnp.bool_(False))
+                              jnp.bool_(False), prefix="shared/")
     if done < cfg.n_layers:
         grp = _slice_layers(params["layers"], done, cfg.n_layers)
         x, _ = jax.lax.scan(body, x, grp)
@@ -481,7 +528,8 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
         x, kv, _ = _attn_block(
             params["shared"], x, cfg, positions, jnp.bool_(False),
             kv=(cache["shared_k"][g], cache["shared_v"][g]),
-            cache_pos=pos if decode else jnp.zeros_like(pos))
+            cache_pos=pos if decode else jnp.zeros_like(pos),
+            prefix="shared/")
         new_k.append(kv[0]); new_v.append(kv[1])
         done = (g + 1) * period
     if done < cfg.n_layers:

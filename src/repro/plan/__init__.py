@@ -1,0 +1,40 @@
+# Mixed-fidelity deployment planner: per-projection D/A split search.
+# The D/A boundary is the paper's design knob; this subsystem turns it
+# into a per-projection deployment decision -- profile sensitivity, search
+# the accuracy/cost Pareto front, serve the resulting plan unchanged
+# through CimEngine + the continuous-batching scheduler (DESIGN.md §8).
+from .plan import (  # noqa: F401
+    DIGITAL_ENTRY,
+    FLOAT_ENTRY,
+    HYBRID_ENTRY,
+    DeploymentPlan,
+    PLAN_FIDELITIES,
+    PlanEntry,
+    plan_for_sites,
+)
+from .candidates import (  # noqa: F401
+    Candidate,
+    DEFAULT_COST_WEIGHTS,
+    combined_cost,
+    default_candidates,
+    digital_candidate,
+    make_candidate,
+    min_adc_bits,
+    prototype_candidate,
+)
+from .profiler import (  # noqa: F401
+    SensitivityProfile,
+    calibration_batch,
+    planned_logits,
+    profile_sensitivities,
+    reference_logits,
+    rel_rms,
+)
+from .search import (  # noqa: F401
+    PlanSearchResult,
+    assignment_cost,
+    evaluate_plan,
+    pareto_search,
+    plan_from_assignment,
+    predicted_rms,
+)

@@ -1,0 +1,136 @@
+"""DeploymentPlan: the per-projection D/A split as a static, hashable value.
+
+The paper's core claim is that the digital/analog boundary is a *design
+knob*: route the top-k bit-products to exact counting logic (DCIM) and the
+rest to the capacitor array (ACIM), trading accuracy against area/energy.
+`CCIMConfig` already parameterizes every knob, but a single global config
+wastes the knob -- different projections of the same LM have wildly
+different noise sensitivity, so a per-projection assignment dominates any
+single setting on the accuracy/cost Pareto front.
+
+A ``DeploymentPlan`` is that assignment: projection path -> ``PlanEntry``
+(a ``CCIMConfig`` + an execution fidelity).  It is deliberately STATIC
+metadata, not a pytree of arrays:
+
+  * entries are a sorted tuple, the whole plan is hashable and equality-
+    comparable, so it rides inside the (frozen, hashable) ``ModelConfig``
+    and through ``jax.jit`` static arguments;
+  * ``models.layers._dense`` resolves its projection path against the plan
+    AT TRACE TIME, so a planned model compiles to exactly one executable
+    per entry-distinct projection -- mixed fidelities coexist in one
+    AOT-compiled serve loop with zero recompiles across decode steps;
+  * ``lm.pack_cim_params`` packs each projection under its own entry's
+    config, and the packed leaf carries that config as pytree metadata, so
+    a mixed pack is self-describing.
+
+Path convention (see ``models.lm.iter_packable_paths``): the path is the
+params-tree path with the scanned-stack key ``"layers"`` dropped, e.g.
+``"attn/wq"``, ``"mlp/w1"``, ``"mamba/out_proj"``, ``"moe/shared/w3"``,
+``"shared/attn/wo"`` (the zamba2 shared block).  Lookup falls back from
+the full path to the basename (so ``{"wq": ...}`` targets every wq) to the
+plan default.  Scanned layer stacks share one entry across depth by
+construction -- that is what keeps K/N/config static under ``lax.scan``.
+
+Fidelities a plan may assign (``PLAN_FIDELITIES``):
+
+  float   bypass the macro entirely (full-precision matmul) -- used by the
+          profiler to isolate one projection, and for layers a deployment
+          keeps off-macro.
+  exact   all-digital CIM [11]: exact integer MAC of the SMF-quantized
+          operands (quantization is the only error) -- the accuracy
+          ceiling, costed as 49 bit-products of counting logic.
+  fast    the hybrid/analog macro emulation (moment-matched fast path);
+          the entry's ``CCIMConfig`` sets the D/A split (``n_dcim_products``
+          6..1 hybrid, 0 all-analog), ADC width and accumulate length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+from ..core.ccim import CCIMConfig, DEFAULT_CONFIG
+
+PLAN_FIDELITIES = ("float", "exact", "fast")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One projection's execution assignment: macro config + fidelity."""
+
+    cfg: CCIMConfig = DEFAULT_CONFIG
+    fidelity: str = "fast"
+    label: str = ""                    # human-readable candidate name
+
+    def __post_init__(self):
+        if self.fidelity not in PLAN_FIDELITIES:
+            raise ValueError(
+                f"plan fidelity {self.fidelity!r} not in {PLAN_FIDELITIES} "
+                "(bit_true needs a fabricated macro instance and is a "
+                "profiling tool, not a deployment fidelity)")
+
+
+FLOAT_ENTRY = PlanEntry(fidelity="float", label="float")
+DIGITAL_ENTRY = PlanEntry(fidelity="exact", label="digital")
+HYBRID_ENTRY = PlanEntry(fidelity="fast", label="hybrid3")  # paper prototype
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentPlan:
+    """Projection path -> PlanEntry, with a default for unlisted paths.
+
+    ``entries`` is a name-sorted tuple of ``(path, PlanEntry)`` pairs so
+    two plans with the same assignment compare/hash equal regardless of
+    construction order.  Build with ``DeploymentPlan.from_dict``.
+    """
+
+    entries: Tuple[Tuple[str, PlanEntry], ...] = ()
+    default: PlanEntry = FLOAT_ENTRY
+
+    @classmethod
+    def from_dict(cls, entries: Mapping[str, PlanEntry],
+                  default: PlanEntry = FLOAT_ENTRY) -> "DeploymentPlan":
+        return cls(entries=tuple(sorted(entries.items())), default=default)
+
+    @classmethod
+    def uniform(cls, entry: PlanEntry) -> "DeploymentPlan":
+        """A global single-config plan (the baseline the planner beats)."""
+        return cls(entries=(), default=entry)
+
+    def as_dict(self) -> Dict[str, PlanEntry]:
+        return dict(self.entries)
+
+    def resolve(self, path: Optional[str]) -> PlanEntry:
+        """Entry for ``path``: exact match, then basename, then default."""
+        if path is None:
+            return self.default
+        d = dict(self.entries)
+        if path in d:
+            return d[path]
+        base = path.rsplit("/", 1)[-1]
+        if base in d:
+            return d[base]
+        return self.default
+
+    def replace_entry(self, path: str, entry: PlanEntry) -> "DeploymentPlan":
+        d = self.as_dict()
+        d[path] = entry
+        return DeploymentPlan.from_dict(d, default=self.default)
+
+    def summary(self) -> Dict[str, str]:
+        """path -> short label (for reports/benchmark JSON)."""
+        def name(e: PlanEntry) -> str:
+            if e.label:
+                return e.label
+            if e.fidelity != "fast":
+                return e.fidelity
+            return (f"hybrid{e.cfg.n_dcim_products}/adc{e.cfg.adc_bits}"
+                    f"/L{e.cfg.acc_len}")
+        out = {p: name(e) for p, e in self.entries}
+        out["<default>"] = name(self.default)
+        return out
+
+
+def plan_for_sites(sites: Iterable[str], entry: PlanEntry,
+                   default: PlanEntry = FLOAT_ENTRY) -> DeploymentPlan:
+    """Every listed site at ``entry`` (profiling / global baselines)."""
+    return DeploymentPlan.from_dict({s: entry for s in sites}, default=default)

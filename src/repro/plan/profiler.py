@@ -1,0 +1,157 @@
+"""Sensitivity profiler: how much does each projection's D/A split hurt?
+
+For every plan-addressable projection site (``lm.iter_packable_paths``)
+and every candidate macro design point, the profiler runs ONE calibration
+batch through the model with a plan that puts ONLY that site on the
+candidate (every other site stays full-precision float) and measures the
+relative RMS degradation of the output logits against the float
+reference:
+
+    rms(site, cand) = ||logits_planned - logits_float|| / ||logits_float||
+
+This is the end-to-end sensitivity -- it folds in everything between the
+projection and the output (residual dilution, norm re-scaling, downstream
+saturation), which per-projection local error cannot see, and it reuses
+the exact serving plumbing (``cfg.cim_plan`` -> ``layers._dense``), so
+what the profiler measures is literally what deployment executes.
+
+Analog candidates are charged for their mismatch + comparator noise, not
+just rounding: profiling runs with ``cfg.cim_noise_seed`` set, which makes
+every projection draw a deterministic moment-matched noise stream (the
+same mechanism noisy serving uses), so the measurement is reproducible.
+
+Isolation is exact under quantization because single-site plans use the
+profiler's own float default -- the probe never perturbs other sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+from .candidates import Candidate
+from .plan import DeploymentPlan, FLOAT_ENTRY
+
+Array = jax.Array
+
+PROFILE_NOISE_SEED = 0x50524F46  # "PROF"
+
+
+def calibration_batch(cfg: ModelConfig, batch: int = 2, seq_len: int = 16,
+                      seed: int = 0) -> np.ndarray:
+    """Uniform-random calibration token ids (a synthetic placeholder;
+    pass real data-pipeline tokens to the profiler for a deployment
+    plan calibrated on representative inputs)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (batch, seq_len), dtype=np.int32)
+
+
+def _float_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, cim_mode=False, cim_plan=None,
+                               cim_noise_seed=None)
+
+
+def reference_logits(params, cfg: ModelConfig, tokens: Array) -> Array:
+    """Full-precision reference forward (macro off everywhere)."""
+    logits, _ = lm.forward(params, _float_cfg(cfg), jnp.asarray(tokens),
+                           remat=False)
+    return logits
+
+
+def planned_logits(params, cfg: ModelConfig, tokens: Array,
+                   plan: DeploymentPlan,
+                   noise_seed: Optional[int] = PROFILE_NOISE_SEED) -> Array:
+    """Forward under ``plan`` (the exact serving path, traced per plan)."""
+    pcfg = dataclasses.replace(cfg, cim_mode=True, cim_plan=plan,
+                               cim_cfg=None, cim_noise_seed=noise_seed)
+    logits, _ = lm.forward(params, pcfg, jnp.asarray(tokens), remat=False)
+    return logits
+
+
+def rel_rms(a: Array, ref: Array) -> float:
+    num = float(jnp.linalg.norm((a - ref).astype(jnp.float32)))
+    den = float(jnp.linalg.norm(ref.astype(jnp.float32)))
+    return num / max(den, 1e-12)
+
+
+@dataclasses.dataclass
+class SensitivityProfile:
+    """Per-site, per-candidate end-to-end RMS degradation table."""
+
+    sites: List[str]                       # plan paths, params-tree order
+    site_shapes: Dict[str, Tuple[int, ...]]
+    labels: List[str]                      # candidate labels, sweep order
+    rms: Dict[str, Dict[str, float]]       # site -> label -> rel RMS
+    # per-token execution multiplicity (default 1): the zamba2 shared
+    # block's weights are parked once but EXECUTE once per layer group
+    site_mults: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def weights_per_site(self, site: str) -> int:
+        """Weights parked on the array for this site (area accounting)."""
+        n = 1
+        for d in self.site_shapes[site]:
+            n *= d
+        return n
+
+    def macs_per_token(self, site: str) -> int:
+        """MACs one token spends in this site: parked weights times how
+        often the projection executes per token (shared blocks > 1)."""
+        return self.weights_per_site(site) * self.site_mults.get(site, 1)
+
+    def as_table(self) -> Dict[str, Dict[str, float]]:
+        return {s: dict(self.rms[s]) for s in self.sites}
+
+
+def profile_sensitivities(
+    params, cfg: ModelConfig, tokens: Array,
+    candidates: Sequence[Candidate],
+    sites: Optional[Sequence[str]] = None,
+    noise_seed: Optional[int] = PROFILE_NOISE_SEED,
+    ref: Optional[Array] = None,
+    verbose: bool = False,
+) -> SensitivityProfile:
+    """One forward per (site, candidate), each isolating a single site.
+
+    Returns the sensitivity table the Pareto search consumes.  Runtime is
+    ``len(sites) * len(candidates)`` calibration forwards -- profiling is
+    an offline, per-deployment cost, exactly like PTQ packing.  ``ref``
+    lets callers that already computed the float reference logits pass
+    them in instead of paying another forward.
+    """
+    shapes = lm.iter_packable_paths(params)
+    if sites is None:
+        sites = list(shapes)
+    tokens = jnp.asarray(tokens)
+    if ref is None:
+        ref = reference_logits(params, cfg, tokens)
+    rms: Dict[str, Dict[str, float]] = {}
+    for site in sites:
+        if site not in shapes:
+            raise ValueError(f"unknown projection site {site!r}; "
+                             f"known: {sorted(shapes)}")
+        row: Dict[str, float] = {}
+        for cand in candidates:
+            plan = DeploymentPlan.from_dict({site: cand.entry},
+                                            default=FLOAT_ENTRY)
+            out = planned_logits(params, cfg, tokens, plan, noise_seed)
+            row[cand.label] = rel_rms(out, ref)
+            if verbose:
+                print(f"[profile] {site:20s} {cand.label:18s} "
+                      f"rms {row[cand.label]:.5f}")
+        rms[site] = row
+    # shared-block projections execute once per layer group per token
+    n_groups = (cfg.n_layers // cfg.shared_attn_period
+                if cfg.shared_attn_period else 1)
+    mults = {s: n_groups for s in sites if s.startswith("shared/")}
+    return SensitivityProfile(
+        sites=list(sites),
+        site_shapes={s: shapes[s] for s in sites},
+        labels=[c.label for c in candidates],
+        rms=rms,
+        site_mults=mults,
+    )

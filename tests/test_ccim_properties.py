@@ -1,0 +1,118 @@
+"""Property tests for the CCIMConfig knob sweeps the deployment planner
+relies on: for EVERY n_dcim_products in 0..6 the D/A split must be a
+clean partition of the 49 bit-products, ordered by significance, with a
+consistent LSB -- otherwise per-projection plans would silently change
+the arithmetic rather than the design point."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # [test] extra absent: fixed-grid fallback
+    from _prop_fallback import given, settings, st
+
+from repro.core import CCIMConfig, DEFAULT_CONFIG
+from repro.core.ccim import _dcim_by_j, _dcim_terms, fold_dcim_planes
+
+NB = DEFAULT_CONFIG.n_mag_bits
+
+
+def _cfg(k: int) -> CCIMConfig:
+    return dataclasses.replace(DEFAULT_CONFIG, n_dcim_products=k)
+
+
+@settings(deadline=None, max_examples=7)
+@given(st.integers(min_value=0, max_value=6))
+def test_dcim_products_ordering_and_significance(k):
+    """Top-k products are sorted by significance (j+k desc, then j desc)
+    and are exactly the k most significant cells of the 7x7 table."""
+    cfg = _cfg(k)
+    prods = cfg.dcim_products
+    assert len(prods) == k
+    sig = [j + kk for j, kk in prods]
+    assert sig == sorted(sig, reverse=True)
+    for (j1, k1), (j2, k2) in zip(prods, prods[1:]):
+        assert (j1 + k1, j1) >= (j2 + k2, j2)
+    # every excluded cell is no more significant than the least included
+    if k:
+        floor_sig = min(sig)
+        border = sum(1 for j in range(NB) for kk in range(NB)
+                     if j + kk > floor_sig)
+        assert border <= k  # all strictly-more-significant cells included
+
+
+@settings(deadline=None, max_examples=7)
+@given(st.integers(min_value=0, max_value=6))
+def test_dcim_lsb_consistency(k):
+    """dcim_lsb == 2^(min significance of the DCIM group); the all-analog
+    split keeps the prototype's 2^11 conversion scale (wider ADC instead)."""
+    cfg = _cfg(k)
+    if k == 0:
+        assert cfg.dcim_lsb == 1 << (2 * NB - 3)   # 2^11
+    else:
+        assert cfg.dcim_lsb == 1 << min(j + kk for j, kk in cfg.dcim_products)
+    # every DCIM weight-table entry is an exact power-of-two multiple of
+    # the LSB (integer counting logic -- no fractional weights)
+    t = cfg.dcim_weight_table()
+    for j, kk in cfg.dcim_products:
+        assert t[j, kk] * cfg.dcim_lsb == 1 << (j + kk)
+
+
+@settings(deadline=None, max_examples=7)
+@given(st.integers(min_value=0, max_value=6))
+def test_weight_tables_partition_all_49_products(k):
+    """dcim_weight_table + acim_weight_table jointly cover every (j, k)
+    bit-product EXACTLY once, at its true significance 2^(j+k)."""
+    cfg = _cfg(k)
+    dcim = cfg.dcim_weight_table().astype(np.int64) * cfg.dcim_lsb
+    acim = cfg.acim_weight_table().astype(np.int64)
+    assert dcim.shape == acim.shape == (NB, NB)
+    for j in range(NB):
+        for kk in range(NB):
+            want = 1 << (j + kk)
+            got = (int(dcim[j, kk]), int(acim[j, kk]))
+            # exactly one side owns the product, at full significance
+            assert got in ((want, 0), (0, want)), (j, kk, got)
+    assert int((dcim > 0).sum()) == k
+    assert int((acim > 0).sum()) == NB * NB - k
+
+
+@settings(deadline=None, max_examples=7)
+@given(st.integers(min_value=0, max_value=6))
+def test_folded_planes_reproduce_dcim_terms(k):
+    """The folded weight planes (ONE per distinct x bit j -- the static
+    plane count the prepacked kernels take as meta) reproduce the
+    elementwise DCIM value for random SMF operands."""
+    cfg = _cfg(k)
+    key = jax.random.PRNGKey(k)
+    kx, kw = jax.random.split(key)
+    xq = jax.random.randint(kx, (64,), -127, 128).clip(-127, 127)
+    wq = jax.random.randint(kw, (64,), -127, 128).clip(-127, 127)
+    d_elem, _, _ = _dcim_terms(xq, wq, cfg)
+    planes = fold_dcim_planes(wq, cfg)
+    by_j = list(_dcim_by_j(cfg))
+    assert len(planes) == len(by_j)                 # plane count == |{j}|
+    sx = jnp.where(xq < 0, -1, 1)
+    mx = jnp.abs(xq)
+    folded = sum((sx * ((mx >> j) & 1)) * p for j, p in zip(by_j, planes))
+    np.testing.assert_array_equal(np.asarray(folded if k else 0 * xq),
+                                  np.asarray(d_elem))
+
+
+@settings(deadline=None, max_examples=7)
+@given(st.integers(min_value=0, max_value=6))
+def test_exact_decomposition_dcim_plus_acim(k):
+    """For every split, DCIM + ideal-ACIM == the exact integer product
+    (the partition is lossless before the ADC)."""
+    cfg = _cfg(k)
+    key = jax.random.PRNGKey(100 + k)
+    kx, kw = jax.random.split(key)
+    xq = jax.random.randint(kx, (16,), -127, 128).clip(-127, 127)
+    wq = jax.random.randint(kw, (16,), -127, 128).clip(-127, 127)
+    d_elem, a_elem, _ = _dcim_terms(xq, wq, cfg)
+    exact = xq.astype(jnp.int32) * wq.astype(jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(d_elem * cfg.dcim_lsb + a_elem), np.asarray(exact))
