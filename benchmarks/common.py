@@ -28,14 +28,21 @@ def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
 
 
-def record(op: str, shape, us: float, speedup_vs_prev=None, note: str = ""):
-    """Accumulate one machine-readable benchmark row (see write_bench_json)."""
+def record(op: str, shape, us, speedup_vs_prev=None, note: str = "",
+           parity_only: bool = False):
+    """Accumulate one machine-readable benchmark row (see write_bench_json).
+
+    ``parity_only`` rows carry us=null: interpret-mode kernel runs are a
+    correctness harness, not a timing -- recording 0.0 us used to read as
+    infinite speedup in the perf trajectory.  Compiled timings are emitted
+    instead whenever the backend actually runs the kernel (TPU).
+    """
     _RECORDS.append(dict(
         op=op,
         shape=list(shape),
-        us=round(us, 1),
+        us=None if parity_only else round(us, 1),
         speedup_vs_prev=None if speedup_vs_prev is None else round(speedup_vs_prev, 2),
-        note=note,
+        note=("parity_only: " + note if parity_only else note),
     ))
 
 

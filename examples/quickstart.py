@@ -66,6 +66,7 @@ import dataclasses
 
 from repro import plan as P
 from repro.configs import get_config
+from repro.kernels.ccim_matmul import autotune
 from repro.launch.serve import serve
 from repro.models import lm
 
@@ -83,6 +84,17 @@ print(f"planned rms {res.measured_rms:.4f} (budget {res.budget_measured:.4f}"
       f" = the global prototype config), modeled cost "
       f"{res.cost['combined']:.3f} vs {res.cost_budget_plan['combined']:.3f}"
       " global / 1.0 all-digital")
+
+# Autotune the decode GEMM schedules once per machine: the winners persist
+# in benchmarks/TUNING_CACHE.json and serving consults them at trace time
+# (every candidate is bit-identical -- tuning can only change speed).
+autotune.autotune_chunk_block(2, mcfg.d_model, 2 * mcfg.d_ff, iters=2)
+autotune.save()
+
+# Serve the planned model: pack once under the plan (plan-compatible
+# QKV / gate-up groups fuse into single wide macro GEMMs -- fuse=True is
+# the default, shown explicitly; tokens are bit-identical either way),
+# then decode through the AOT-compiled step with tuned blocks.
 tokens = serve("minicpm-2b", batch=2, prompt_len=16, gen=8, plan=res.plan,
-               pack=True)   # pack-once -> mixed-fidelity serve, AOT-compiled
+               pack=True, fuse=True)
 print("served tokens through the planned model:", tokens[0])

@@ -26,6 +26,7 @@ from .complex_mac import (  # noqa: F401
 )
 from .engine import (  # noqa: F401
     CimEngine,
+    FusedPackedCimWeights,
     PackedCimWeights,
     PackedComplexCimWeights,
     pack_cim_weights,

@@ -420,6 +420,8 @@ def hybrid_mac_fast(
 
 
 _CHUNK_BLOCK = 16  # ADC conversions processed per scan step (cache-sized)
+_SKINNY_M = 16     # at/below this M the scan collapses to one step (decode)
+_UNROLL_BLOCKS = 4  # chunk loops at/below this length unroll (no while-op)
 
 
 def _dcim_by_j(cfg: CCIMConfig) -> dict:
@@ -452,16 +454,22 @@ def fold_dcim_planes(wq: Array, cfg: CCIMConfig = DEFAULT_CONFIG) -> list:
 def fast_gemm_weight_ops(
     wq: Array,                       # (C, L, N) ints in [-127, 127]
     cfg: CCIMConfig = DEFAULT_CONFIG,
-) -> Tuple[Array, Tuple[Array, ...]]:
+) -> Tuple[Array, Array]:
     """Weight-side operand prep for the fast GEMM (the weight-stationary
     half of the dataflow -- computable ONCE per weight matrix).
 
     Returns (wf, w_planes): the float copy of the chunked weights and the
-    folded DCIM planes as float32.  Planes carry the weight sign; their
-    abs() is the magnitude plane the noisy path needs.
+    folded DCIM planes as ONE float32 (C, J*L, N) array -- the per-j
+    planes concatenate along L, so the whole DCIM term is a single
+    batched dot against the matching concatenated x planes (decode-shaped
+    calls are launch-bound: one dot instead of J).  Planes carry the
+    weight sign; their abs() is the magnitude plane the noisy path needs.
     """
     wf = wq.astype(jnp.float32)
-    w_pl = tuple(p.astype(jnp.float32) for p in fold_dcim_planes(wq, cfg))
+    planes = [p.astype(jnp.float32) for p in fold_dcim_planes(wq, cfg)]
+    C, L, N = wq.shape
+    w_pl = (jnp.concatenate(planes, axis=1) if planes
+            else jnp.zeros((C, 0, N), jnp.float32))
     return wf, w_pl
 
 
@@ -470,6 +478,7 @@ def hybrid_mac_fast_gemm(
     wq: Array,                       # (C, L, N) ints in [-127, 127]
     noise_key: Optional[Array],
     cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_segments: Optional[Tuple[int, ...]] = None,
 ) -> Array:
     """Chunked fast-path GEMM; returns sum_c y8_c as (M, N) int32 (unscaled).
 
@@ -477,25 +486,66 @@ def hybrid_mac_fast_gemm(
     y8 over the (M,1,C,L) x (1,N,C,L) broadcast of the same operands.
     """
     wf, w_pl = fast_gemm_weight_ops(wq, cfg)
-    return hybrid_mac_fast_gemm_prepacked(xq, wf, w_pl, noise_key, cfg)
+    return hybrid_mac_fast_gemm_prepacked(xq, wf, w_pl, noise_key, cfg,
+                                          noise_segments=noise_segments)
+
+
+def _fast_gemm_noise(noise_key, M: int, N: int, C: int,
+                     noise_segments: Optional[Tuple[int, ...]]) -> Array:
+    """The fast path's (C, M, N) mismatch/comparator noise draw.
+
+    Drawn in the broadcast path's (M, N, C) layout, then re-laid-out, so
+    noisy results stay bit-identical to hybrid_mac_fast.  For a fused
+    projection group (see models.layers._dense_group) ``noise_key`` is a
+    tuple of per-segment keys and ``noise_segments`` the per-segment N
+    sizes: each segment draws from ITS OWN stream -- exactly the draw the
+    unfused per-projection call would make -- and the draws concatenate
+    along N, so fusion stays bit-identical even under analog noise.
+    """
+    if noise_segments is not None:
+        assert len(noise_segments) == len(noise_key), (
+            noise_segments, len(noise_key))
+        assert sum(noise_segments) == N, (noise_segments, N)
+        draw = jnp.concatenate(
+            [jax.random.normal(k, (M, n, C))
+             for k, n in zip(noise_key, noise_segments)], axis=1)
+    else:
+        draw = jax.random.normal(noise_key, (M, N, C))
+    return jnp.transpose(draw, (2, 0, 1))
 
 
 def hybrid_mac_fast_gemm_prepacked(
     xq: Array,                       # (M, C, L) ints in [-127, 127]
     wf: Array,                       # (C, L, N) float32 weight copy
-    w_pl: Tuple[Array, ...],         # folded signed DCIM planes, (C, L, N) each
+    w_pl: Array,                     # (C, J*L, N) concatenated folded planes
     noise_key: Optional[Array],
     cfg: CCIMConfig = DEFAULT_CONFIG,
+    noise_segments: Optional[Tuple[int, ...]] = None,
+    chunk_block: Optional[int] = None,
 ) -> Array:
     """Fast-path GEMM on prepacked weight operands (see fast_gemm_weight_ops).
 
     Only activation-side quantities are derived here -- the weight side
     streams from storage exactly as bit-cells do in the silicon macro.
-    The chunk axis is processed _CHUNK_BLOCK conversions at a time inside a
-    scan, so the (Cb, M, N) partials stay cache-resident instead of
-    streaming O(C*M*N) intermediates through memory; noise-free runs need
-    only 1 + #distinct-j GEMMs per step (the magnitude GEMMs feeding the
-    matched variance exist only when a noise_key is given).
+    The chunk axis is processed ``chunk_block`` conversions at a time
+    inside a scan, so the (Cb, M, N) partials stay cache-resident instead
+    of streaming O(C*M*N) intermediates through memory.  Noise-free runs
+    need exactly TWO batched dots per step: the exact dot, plus one dot
+    of the L-concatenated x bit-planes against the L-concatenated folded
+    weight planes (bit-identical to per-j dots -- every partial is an
+    exact integer in float32); the magnitude dots feeding the matched
+    variance exist only when a noise_key is given.
+
+    ``chunk_block`` is a pure scheduling knob: partials are summed in
+    int32, so ANY block size gives bit-identical results.  None consults
+    the persisted tuning cache (kernels.ccim_matmul.autotune) at trace
+    time, falling back to one single step for skinny (decode-shaped) M --
+    a scan over tiny (cb, M, L) x (cb, L, N) batched GEMMs is pure
+    dispatch overhead when the (C, M, N) partials already fit in cache.
+    At skinny M the single-step path also drops the chunk-axis blocking
+    machinery and the operand-prep barrier entirely: decode is bound by
+    kernel-launch count, and fusing the tiny prep/epilogue chains is a
+    win there (the barrier exists to protect the LARGE-shape GEMM loops).
     """
     M, C, L = xq.shape
     sx, mx = split_sign_mag(xq)
@@ -503,63 +553,92 @@ def hybrid_mac_fast_gemm_prepacked(
     xf = xT(xq).astype(jnp.float32)
     sxf, mxT = xT(sx).astype(jnp.float32), xT(mx)
 
-    # one x bit-plane per distinct j, pairing with the folded w planes
+    # one x bit-plane per distinct j, concatenated along L to pair with
+    # the (C, J*L, N) folded weight planes in ONE batched dot
     x_pl, xm_pl = [], []
     for j in _dcim_by_j(cfg):
         xbit = ((mxT >> j) & 1).astype(jnp.float32)
         x_pl.append(sxf * xbit)
         xm_pl.append(xbit)
+    n_j = len(x_pl)
+    xcat = (jnp.concatenate(x_pl, axis=-1) if n_j
+            else jnp.zeros((C, M, 0), jnp.float32))
 
     noisy = noise_key is not None
-    ops = [xf, wf, tuple(x_pl), tuple(w_pl)]
+    ops = [xf, wf, xcat, w_pl]
     if noisy:
         # |folded signed plane| == the magnitude plane (the fold weights
         # are non-negative), so the mags need no separate storage
-        ops += [jnp.abs(xf), jnp.abs(wf), tuple(xm_pl),
-                tuple(jnp.abs(p) for p in w_pl)]
-        # drawn in the broadcast path's (M, N, C) layout, then re-laid-out,
-        # so noisy results stay bit-identical to hybrid_mac_fast
-        ops.append(jnp.transpose(
-            jax.random.normal(noise_key, (M, wf.shape[-1], C)), (2, 0, 1)))
-    # barrier: keep XLA from fusing operand prep into the GEMM loops (the
-    # CPU backend falls off its fast GEMM path otherwise)
-    ops = jax.lax.optimization_barrier(tuple(ops))
+        xmcat = (jnp.concatenate(xm_pl, axis=-1) if n_j
+                 else jnp.zeros((C, M, 0), jnp.float32))
+        ops += [jnp.abs(xf), jnp.abs(wf), xmcat, jnp.abs(w_pl)]
+        ops.append(_fast_gemm_noise(noise_key, M, wf.shape[-1], C,
+                                    noise_segments))
+
+    if chunk_block is None:
+        from ..kernels.ccim_matmul.autotune import tuned_chunk_block
+        chunk_block = tuned_chunk_block(M, C, wf.shape[-1], cfg.acc_len)
+    cb = min(chunk_block, C)
+    n_blk = (C + cb - 1) // cb
+
+    if M > _SKINNY_M:
+        # barrier: keep XLA from fusing operand prep into the GEMM loops
+        # (the CPU backend falls off its fast GEMM path otherwise).  At
+        # skinny M the GEMMs are launch-bound, not loop-bound -- fusing
+        # the tiny prep chains is strictly better, so no barrier there.
+        ops = list(jax.lax.optimization_barrier(tuple(ops)))
+
+    dyn_var = (cfg.comparator_noise_lsb * cfg.dcim_lsb) ** 2
+    lsb, half = float(cfg.dcim_lsb), cfg.adc_half_range
+
+    def step(acc, inp, bmask=None):
+        if noisy:
+            bxf, bwf, bxc, bwc, bmx, bmw, bxmc, bwmc, bnoise = inp
+        else:
+            bxf, bwf, bxc, bwc = inp
+        # float32 GEMMs and epilogue are exact: every value is an integer
+        # well below 2^24 (|chunk dot| <= acc_len * 127^2)
+        a_real = jnp.matmul(bxf, bwf)                       # (cb, M, N)
+        dcim = jnp.matmul(bxc, bwc) if n_j else jnp.zeros_like(a_real)
+        a_real = a_real - dcim * lsb                        # = ideal ACIM
+        if noisy:
+            a_mag = jnp.matmul(bmx, bmw) - lsb * (
+                jnp.matmul(bxmc, bwmc) if n_j else 0.0)
+            var = cfg.sigma_unit**2 * cfg.fast_noise_correction * a_mag
+            a_real = a_real + jnp.sqrt(var + dyn_var) * bnoise
+        code = jnp.clip(jnp.floor(a_real / lsb + 0.5), -half, half - 1)
+        y8 = (dcim + code).astype(jnp.int32)
+        if bmask is not None:
+            y8 = y8 * bmask[:, None, None]
+        return acc + jnp.sum(y8, axis=0), None
+
+    acc0 = jnp.zeros((M, wf.shape[-1]), jnp.int32)
+    if n_blk == 1:
+        # single step (the decode shape): no chunk-axis padding, blocking
+        # reshapes or phantom-chunk mask -- the step runs on the raw ops
+        out, _ = step(acc0, tuple(ops))
+        return out
 
     # pad the chunk axis to the scan block; phantom chunks are masked so
     # the noisy path sees exactly C conversions, as in silicon
-    cb = min(_CHUNK_BLOCK, C)
-    n_blk = (C + cb - 1) // cb
     pad = n_blk * cb - C
     mask = jnp.ones((C,), jnp.int32)
     blk = lambda v: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1)).reshape(
         n_blk, cb, *v.shape[1:]
     )
-    xs = jax.tree_util.tree_map(blk, tuple(ops)) + (blk(mask),)
-
-    dyn_var = (cfg.comparator_noise_lsb * cfg.dcim_lsb) ** 2
-    lsb, half = float(cfg.dcim_lsb), cfg.adc_half_range
-
-    def step(acc, inp):
-        if noisy:
-            bxf, bwf, bx_pl, bw_pl, bmx, bmw, bxm_pl, bwm_pl, bnoise, bmask = inp
-        else:
-            bxf, bwf, bx_pl, bw_pl, bmask = inp
-        # float32 GEMMs and epilogue are exact: every value is an integer
-        # well below 2^24 (|chunk dot| <= acc_len * 127^2)
-        a_real = jnp.matmul(bxf, bwf)                       # (cb, M, N)
-        dcim = sum(jnp.matmul(a, b) for a, b in zip(bx_pl, bw_pl))
-        a_real = a_real - dcim * lsb                        # = ideal ACIM
-        if noisy:
-            a_mag = jnp.matmul(bmx, bmw) - lsb * sum(
-                jnp.matmul(a, b) for a, b in zip(bxm_pl, bwm_pl))
-            var = cfg.sigma_unit**2 * cfg.fast_noise_correction * a_mag
-            a_real = a_real + jnp.sqrt(var + dyn_var) * bnoise
-        code = jnp.clip(jnp.floor(a_real / lsb + 0.5), -half, half - 1)
-        y8 = (dcim + code).astype(jnp.int32) * bmask[:, None, None]
-        return acc + jnp.sum(y8, axis=0), None
-
-    acc0 = jnp.zeros((M, wf.shape[-1]), jnp.int32)
-    out, _ = jax.lax.scan(step, acc0, xs)
+    xs = jax.tree_util.tree_map(blk, tuple(ops))
+    bmasks = blk(mask)
+    if n_blk <= _UNROLL_BLOCKS:
+        # short chunk loops unroll: lax.scan lowers to a while-op whose
+        # loop-carry copies and trip machinery cost more than the math at
+        # decode shapes (int32 partial sums -- order-identical to the scan)
+        acc = acc0
+        for i in range(n_blk):
+            acc, _ = step(acc, jax.tree_util.tree_map(lambda v: v[i], xs),
+                          bmasks[i])
+        return acc
+    out, _ = jax.lax.scan(lambda a, i: step(a, i[:-1], i[-1]), acc0,
+                          xs + (bmasks,))
     return out
 
 
@@ -590,6 +669,7 @@ def cim_matmul_int(
     fidelity: str = "fast",
     *,
     use_pallas: Optional[bool] = None,
+    noise_segments: Optional[Tuple[int, ...]] = None,
 ) -> Array:
     """Integer GEMM through the macro:  (M,K) @ (K,N) -> (M,N) int64.
 
@@ -614,10 +694,15 @@ def cim_matmul_int(
     from .engine import PackedCimWeights, packed_cim_matmul_int
     if isinstance(w_q, PackedCimWeights):
         return packed_cim_matmul_int(x_q, w_q, macro, cfg, noise_key,
-                                     fidelity, use_pallas=use_pallas)
+                                     fidelity, use_pallas=use_pallas,
+                                     noise_segments=noise_segments)
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2, (K, K2)
+    if noise_segments is not None and fidelity not in ("fast", "exact"):
+        raise ValueError(
+            "per-segment noise streams (fused projection groups) are only "
+            f"defined for the 'fast'/'exact' fidelities, got {fidelity!r}")
     if fidelity == "fast" and noise_key is None and _kernel_numerics_match(cfg):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
@@ -633,7 +718,8 @@ def cim_matmul_int(
 
     if fidelity == "fast":
         # per-conversion partials are accumulated digitally inside the scan
-        return hybrid_mac_fast_gemm(xq, wq, noise_key, cfg) * cfg.dcim_lsb
+        return hybrid_mac_fast_gemm(xq, wq, noise_key, cfg,
+                                    noise_segments) * cfg.dcim_lsb
     elif fidelity == "fast_broadcast":
         xc = xq[:, None, :, :]                      # (M,1,C,L)
         wc = jnp.transpose(wq, (2, 0, 1))[None]     # (1,N,C,L)
@@ -665,6 +751,7 @@ def cim_matmul(
     fidelity: str = "fast",
     per_channel: bool = True,
     use_pallas: Optional[bool] = None,
+    noise_segments: Optional[Tuple[int, ...]] = None,
 ) -> Array:
     """float (M,K) @ (K,N) through the emulated macro, dequantized.
 
@@ -674,7 +761,8 @@ def cim_matmul(
     from .engine import PackedCimWeights, packed_cim_matmul
     if isinstance(w, PackedCimWeights):
         return packed_cim_matmul(x, w, cfg, noise_key=noise_key, macro=macro,
-                                 fidelity=fidelity, use_pallas=use_pallas)
+                                 fidelity=fidelity, use_pallas=use_pallas,
+                                 noise_segments=noise_segments)
     sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)          # per row
     sw = (
         smf_scale(w, axis=0, keepdims=True, cfg=cfg)
@@ -684,7 +772,8 @@ def cim_matmul(
     xq = quantize_smf(x, sx, cfg)
     wq = quantize_smf(w, sw, cfg)
     y_int = cim_matmul_int(xq, wq, macro, cfg, noise_key, fidelity,
-                           use_pallas=use_pallas)
+                           use_pallas=use_pallas,
+                           noise_segments=noise_segments)
     return y_int.astype(jnp.float32) * sx * jnp.reshape(sw, (1, -1))
 
 

@@ -70,7 +70,8 @@ class PackedCimWeights:
     sign: Array                       # (K, N) int8 in {-1, +1}
     mag: Array                        # (K, N) int8 in [0, 127]
     gemm_w: Array                     # (C, L, N) float32 chunked weights
-    gemm_planes: Tuple[Array, ...]    # per distinct j: (C, L, N) float32
+    gemm_planes: Array                # (C, J*L, N) float32 folded planes,
+                                      # L-concatenated over distinct j
     pallas_w: Array                   # (Kp, Np) int8, block-padded
     pallas_planes: Array              # (n_j, Kp, Np) int8 folded planes
     k_dim: int                        # static: logical K
@@ -94,6 +95,39 @@ jax.tree_util.register_dataclass(
                  "pallas_w", "pallas_planes"],
     meta_fields=["k_dim", "n_dim", "cfg"],
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPackedCimWeights:
+    """A horizontally fused projection group packed as ONE wide array.
+
+    Several projections that consume the SAME input activation and resolve
+    to the SAME deployment-plan entry (QKV, gate/up, the mamba2 input
+    projections -- see models.lm.pack_cim_params) concatenate along N and
+    pack as a single ``PackedCimWeights``: one activation quantization,
+    one macro GEMM and one dequant serve the whole group, which is the
+    decode hot path's dominant win at skinny M (7 -> ~3 GEMMs per block).
+
+    ``seg_names``/``seg_dims`` are STATIC metadata: the leaf self-
+    describes its per-segment N-offsets, so consumers split the wide
+    output back into per-projection results with static slices -- bit-
+    identical to the unfused calls (per-channel scales, quantization and
+    the fast path's per-column arithmetic are all column-local, and noisy
+    serving draws per-segment noise streams, see ccim._fast_gemm_noise).
+    """
+
+    packed: PackedCimWeights
+    seg_names: Tuple[str, ...]        # static: member projection names
+    seg_dims: Tuple[int, ...]         # static: per-segment logical N sizes
+
+    @property
+    def n_dim(self) -> int:
+        return self.packed.n_dim
+
+
+jax.tree_util.register_dataclass(
+    FusedPackedCimWeights, data_fields=["packed"],
+    meta_fields=["seg_names", "seg_dims"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,13 +169,17 @@ def pack_quantized_cim_weights(
     sign, mag = split_sign_mag(wq)
     planes = fold_dcim_planes(wq, cfg)
 
-    # fast-GEMM layout: K padded to whole ADC conversions, chunked (C, L, N)
+    # fast-GEMM layout: K padded to whole ADC conversions, chunked (C, L, N);
+    # folded planes concatenate along L into ONE (C, J*L, N) array so the
+    # whole DCIM term is a single batched dot at serve time
     C = _pad_to_chunks(K, cfg.acc_len)
     pad_k = C * cfg.acc_len - K
     chunk = lambda v: jnp.pad(v, ((0, pad_k), (0, 0))).reshape(
         C, cfg.acc_len, N)
     gemm_w = chunk(wq).astype(jnp.float32)
-    gemm_planes = tuple(chunk(p).astype(jnp.float32) for p in planes)
+    gemm_planes = (jnp.concatenate([chunk(p).astype(jnp.float32)
+                                    for p in planes], axis=1) if planes
+                   else jnp.zeros((C, 0, N), jnp.float32))
 
     # Pallas layout: block-padded once (M-independent by construction);
     # the pad geometry follows the config's accumulate length, and an
@@ -228,9 +266,18 @@ def packed_cim_matmul_int(
     fidelity: str = "fast",
     *,
     use_pallas: Optional[bool] = None,
+    noise_segments: Optional[Tuple[int, ...]] = None,
+    chunk_block: Optional[int] = None,
 ) -> Array:
     """Integer GEMM against prepacked weights; bit-identical to
-    ``cim_matmul_int(x_q, packed.wq(), ...)`` for every fidelity."""
+    ``cim_matmul_int(x_q, packed.wq(), ...)`` for every fidelity.
+
+    ``noise_segments`` (with a matching tuple of keys as ``noise_key``)
+    draws one analog-noise stream per fused projection segment, keeping
+    fused execution bit-identical to the unfused per-projection calls.
+    ``chunk_block`` overrides the fast path's tuned scan block (the
+    autotuner forces candidates through it; results are invariant).
+    """
     M, K = x_q.shape
     assert K == packed.k_dim, (K, packed.k_dim)
     if packed.cfg != cfg:
@@ -256,12 +303,14 @@ def packed_cim_matmul_int(
         pad = C * cfg.acc_len - K
         xq = jnp.pad(x_q, ((0, 0), (0, pad))).reshape(M, C, cfg.acc_len)
         return hybrid_mac_fast_gemm_prepacked(
-            xq, packed.gemm_w, packed.gemm_planes, noise_key, cfg
+            xq, packed.gemm_w, packed.gemm_planes, noise_key, cfg,
+            noise_segments=noise_segments, chunk_block=chunk_block,
         ) * cfg.dcim_lsb
     # cold-path fidelities reconstruct the raw ints (one O(K*N) multiply,
     # dwarfed by their own per-bit-product work)
     return cim_matmul_int(x_q, packed.wq(), macro, cfg, noise_key, fidelity,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas,
+                          noise_segments=noise_segments)
 
 
 def packed_cim_matmul(
@@ -272,13 +321,17 @@ def packed_cim_matmul(
     macro: Optional[MacroInstance] = None,
     fidelity: str = "fast",
     use_pallas: Optional[bool] = None,
+    noise_segments: Optional[Tuple[int, ...]] = None,
+    chunk_block: Optional[int] = None,
 ) -> Array:
     """float (M,K) @ packed -> (M,N): per-row activation quantization is
     the ONLY conditioning left on the hot path (weights sit in the array)."""
     sx = smf_scale(x, axis=-1, keepdims=True, cfg=cfg)
     xq = quantize_smf(x, sx, cfg)
     y_int = packed_cim_matmul_int(xq, packed, macro, cfg, noise_key, fidelity,
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas,
+                                  noise_segments=noise_segments,
+                                  chunk_block=chunk_block)
     return y_int.astype(jnp.float32) * sx * jnp.reshape(packed.scale, (1, -1))
 
 
@@ -308,14 +361,21 @@ class CimEngine:
     def pack_complex(self, w_re: Array, w_im: Array) -> PackedComplexCimWeights:
         return pack_complex_cim_weights(w_re, w_im, self.cfg)
 
-    def matmul(self, x: Array, w, noise_key: Optional[Array] = None) -> Array:
-        """(..., K) @ w -> (..., N) with STE gradients; w raw or packed."""
+    def matmul(self, x: Array, w, noise_key: Optional[Array] = None,
+               noise_segments: Optional[Tuple[int, ...]] = None) -> Array:
+        """(..., K) @ w -> (..., N) with STE gradients; w raw, packed or a
+        fused projection group (``noise_segments`` then carries the static
+        per-segment N sizes matching a tuple of per-segment noise keys)."""
         from .qat import cim_linear, cim_linear_packed
+        if isinstance(w, FusedPackedCimWeights):
+            segs = w.seg_dims if noise_key is not None else None
+            return cim_linear_packed(x, w.packed, noise_key, self.cfg,
+                                     self.fidelity, self.use_pallas, segs)
         if isinstance(w, PackedCimWeights):
             return cim_linear_packed(x, w, noise_key, self.cfg, self.fidelity,
-                                     self.use_pallas)
+                                     self.use_pallas, noise_segments)
         return cim_linear(x, w, noise_key, self.cfg, self.fidelity,
-                          self.use_pallas)
+                          self.use_pallas, noise_segments)
 
     def matmul_int(self, x_q: Array, w,
                    noise_key: Optional[Array] = None) -> Array:

@@ -24,28 +24,32 @@ from .engine import PackedCimWeights, packed_cim_matmul
 Array = jax.Array
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def cim_linear(x: Array, w: Array, noise_key: Optional[Array],
                cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
-               use_pallas: Optional[bool] = None) -> Array:
+               use_pallas: Optional[bool] = None,
+               noise_segments: Optional[tuple] = None) -> Array:
     """(..., K) @ (K, N) through the macro, STE gradients.
 
     use_pallas routes noise-free 'fast' forwards through the Pallas TPU
-    kernel (None = auto: only on a TPU backend).
+    kernel (None = auto: only on a TPU backend).  ``noise_segments``
+    (static) with a tuple of keys as ``noise_key`` draws per-segment
+    noise streams for a fused projection group (models.layers).
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = cim_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), cfg,
                    noise_key=noise_key, fidelity=fidelity,
-                   use_pallas=use_pallas)
+                   use_pallas=use_pallas, noise_segments=noise_segments)
     return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
-def _fwd(x, w, noise_key, cfg, fidelity, use_pallas):
-    return cim_linear(x, w, noise_key, cfg, fidelity, use_pallas), (x, w)
+def _fwd(x, w, noise_key, cfg, fidelity, use_pallas, noise_segments):
+    return (cim_linear(x, w, noise_key, cfg, fidelity, use_pallas,
+                       noise_segments), (x, w))
 
 
-def _bwd(cfg, fidelity, use_pallas, res, g):
+def _bwd(cfg, fidelity, use_pallas, noise_segments, res, g):
     x, w = res
     gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
     gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
@@ -71,11 +75,12 @@ def _zero_cotangent(tree):
     return jax.tree.map(z, tree)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def cim_linear_packed(x: Array, packed: PackedCimWeights,
                       noise_key: Optional[Array],
                       cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
-                      use_pallas: Optional[bool] = None) -> Array:
+                      use_pallas: Optional[bool] = None,
+                      noise_segments: Optional[tuple] = None) -> Array:
     """(..., K) @ packed -> (..., N) through the macro, STE gradients.
 
     Forward is bit-identical to ``cim_linear`` on the float weights the
@@ -87,16 +92,19 @@ def cim_linear_packed(x: Array, packed: PackedCimWeights,
     x2 = x.reshape(-1, x.shape[-1])
     y = packed_cim_matmul(x2.astype(jnp.float32), packed, cfg,
                           noise_key=noise_key, fidelity=fidelity,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas,
+                          noise_segments=noise_segments)
     return y.reshape(*lead, packed.n_dim).astype(x.dtype)
 
 
-def _fwd_packed(x, packed, noise_key, cfg, fidelity, use_pallas):
-    y = cim_linear_packed(x, packed, noise_key, cfg, fidelity, use_pallas)
+def _fwd_packed(x, packed, noise_key, cfg, fidelity, use_pallas,
+                noise_segments):
+    y = cim_linear_packed(x, packed, noise_key, cfg, fidelity, use_pallas,
+                          noise_segments)
     return y, (x, packed)
 
 
-def _bwd_packed(cfg, fidelity, use_pallas, res, g):
+def _bwd_packed(cfg, fidelity, use_pallas, noise_segments, res, g):
     x, packed = res
     w_deq = packed.dequantized()
     gx = jnp.einsum("...n,kn->...k", g, w_deq).astype(x.dtype)

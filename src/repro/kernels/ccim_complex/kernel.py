@@ -153,6 +153,102 @@ def _ccim_complex_kernel_prepacked(
         oi_ref[...] = acc_im[...]
 
 
+# int8 sublane tile the skinny path pads M to: ONE definition shared with
+# the real-valued kernels (the padding contract must match dispatch-wide)
+from ..ccim_matmul.kernel import SKINNY_SUBLANE  # noqa: E402
+
+
+def _ccim_complex_kernel_prepacked_skinny(
+    xr_ref, xi_ref, wr_ref, wi_ref, planes_ref, or_ref, oi_ref,
+    acc_re, acc_im, *, bk: int, n_k: int,
+):
+    """Decode-shaped fused complex variant: M padded once to the int8
+    sublane width (32) instead of the 128-lane MXU block, and the four
+    folded weight planes arrive STACKED as one full-K resident block per N
+    tile (sliced in-kernel per k step), so only the co-located (Re, Im)
+    weight tiles stream with k -- double-buffered by the Pallas pipeline.
+    Bit-identical to ``_ccim_complex_kernel_prepacked``."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_re[...] = jnp.zeros_like(acc_re)
+        acc_im[...] = jnp.zeros_like(acc_im)
+
+    k_step = pl.program_id(1)
+    wr = wr_ref[...].astype(jnp.int32)                          # (bk, bn)
+    wi = wi_ref[...].astype(jnp.int32)
+    sl = lambda i: planes_ref[i, pl.ds(k_step * bk, bk), :].astype(jnp.int32)
+    wr6, wr5, wi6, wi5 = sl(0), sl(1), sl(2), sl(3)
+    xr, xr6, xr5 = _msb_planes(xr_ref[...].astype(jnp.int32))   # (Mp, bk)
+    xi, xi6, xi5 = _msb_planes(xi_ref[...].astype(jnp.int32))
+
+    bm, bn = xr.shape[0], wr.shape[1]
+    c = bk // ACC_LEN
+    to_xc = lambda v: v.reshape(bm, c, ACC_LEN).swapaxes(0, 1)  # (C, Mp, L)
+    to_wc = lambda v: v.reshape(c, ACC_LEN, bn)                 # (C, L, bn)
+    xrc = tuple(map(to_xc, (xr, xr6, xr5)))
+    xic = tuple(map(to_xc, (xi, xi6, xi5)))
+    wrc = tuple(map(to_wc, (wr, wr6, wr5)))
+    wic = tuple(map(to_wc, (wi, wi6, wi5)))
+
+    y_ac = _y8_chunks_folded(*xrc, *wrc)
+    y_bd = _y8_chunks_folded(*xic, *wic)
+    y_ad = _y8_chunks_folded(*xrc, *wic)
+    y_bc = _y8_chunks_folded(*xic, *wrc)
+    acc_re[...] += jnp.sum(y_ac - y_bd, axis=0) * DCIM_LSB
+    acc_im[...] += jnp.sum(y_ad + y_bc, axis=0) * DCIM_LSB
+
+    @pl.when(k_step == n_k - 1)
+    def _done():
+        or_ref[...] = acc_re[...]
+        oi_ref[...] = acc_im[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "bk", "interpret")
+)
+def ccim_complex_matmul_prepacked_skinny_pallas(
+    x_re: jax.Array, x_im: jax.Array,     # (Mp, K) int8, Mp % 32 == 0
+    w_re: jax.Array, w_im: jax.Array,     # (K, N) int8
+    planes: jax.Array,                    # (4, K, N) int8: wr6, wr5, wi6, wi5
+    *,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Skinny-M prepacked fused complex CIM GEMM -> (y_re, y_im) int32 at
+    x2^11; bit-identical to ``ccim_complex_matmul_prepacked_pallas``."""
+    Mp, K = x_re.shape
+    K2, N = w_re.shape
+    assert K == K2 and x_im.shape == (Mp, K) and w_im.shape == (K, N)
+    assert planes.shape == (4, K, N), planes.shape
+    assert Mp % SKINNY_SUBLANE == 0, Mp
+    assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
+    assert bk % ACC_LEN == 0 and bk % SKINNY_SUBLANE == 0, bk
+
+    n_k = K // bk
+    kernel = functools.partial(_ccim_complex_kernel_prepacked_skinny,
+                               bk=bk, n_k=n_k)
+    x_spec = pl.BlockSpec((Mp, bk), lambda j, k: (0, k))
+    w_spec = pl.BlockSpec((bk, bn), lambda j, k: (k, j))
+    p_spec = pl.BlockSpec((4, K, bn), lambda j, k: (0, 0, j))   # resident
+    o_spec = pl.BlockSpec((Mp, bn), lambda j, k: (0, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn, n_k),
+        in_specs=[x_spec, x_spec, w_spec, w_spec, p_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, N), jnp.int32),
+            jax.ShapeDtypeStruct((Mp, N), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Mp, bn), jnp.int32),
+            pltpu.VMEM((Mp, bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_re, x_im, w_re, w_im, planes)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )

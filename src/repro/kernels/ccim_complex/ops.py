@@ -13,8 +13,10 @@ import jax.numpy as jnp
 
 from ..ccim_matmul.ops import (_pad_to, _pick_block, pick_gemm_blocks,
                                pick_weight_blocks)
-from .kernel import (ACC_LEN, ccim_complex_matmul_pallas,
-                     ccim_complex_matmul_prepacked_pallas)
+from ..ccim_matmul.ops import SKINNY_VMEM_BUDGET
+from .kernel import (ACC_LEN, SKINNY_SUBLANE, ccim_complex_matmul_pallas,
+                     ccim_complex_matmul_prepacked_pallas,
+                     ccim_complex_matmul_prepacked_skinny_pallas)
 from .ref import ccim_complex_matmul_ref
 
 
@@ -83,6 +85,18 @@ def ccim_complex_matmul_int_prepacked(
             jnp.pad(x_im, pk).astype(jnp.int32),
             w_re.astype(jnp.int32), w_im.astype(jnp.int32))
         return yr[:, :n_dim], yi[:, :n_dim]
+    if (M <= SKINNY_SUBLANE and 4 * Kp * bn <= SKINNY_VMEM_BUDGET
+            and bk % SKINNY_SUBLANE == 0):
+        # decode-shaped: pad M to the sublane width, keep the four folded
+        # planes VMEM-resident across the K-loop (see the skinny kernel)
+        px = ((0, SKINNY_SUBLANE - M), (0, Kp - K))
+        y_re, y_im = ccim_complex_matmul_prepacked_skinny_pallas(
+            jnp.pad(x_re, px).astype(jnp.int8),
+            jnp.pad(x_im, px).astype(jnp.int8),
+            w_re, w_im, jnp.stack([wr_p6, wr_p5, wi_p6, wi_p5]),
+            bn=bn, bk=bk, interpret=interpret,
+        )
+        return y_re[:M, :n_dim], y_im[:M, :n_dim]
     bm = _pick_block(M, 128)
     Mp = _pad_to(M, bm)
     px = ((0, Mp - M), (0, Kp - K))

@@ -1,0 +1,261 @@
+"""Persisted block-size autotuning for the CIM GEMM hot paths.
+
+Two tunable schedules feed from one JSON cache:
+
+  fast_gemm     the XLA fast-path scan's chunk block (``chunk_block`` in
+                core.ccim.hybrid_mac_fast_gemm_prepacked) -- how many ADC
+                conversions each scan step processes.  Pure scheduling:
+                int32 partial sums make every block size bit-identical.
+  skinny_pallas (bn, bk) for the skinny-M prepacked Pallas kernel
+                (kernel.ccim_matmul_prepacked_skinny_pallas) -- only
+                meaningful on a TPU backend.
+
+The cache lives at ``benchmarks/TUNING_CACHE.json`` (override with
+$REPRO_TUNING_CACHE) and is consulted AT TRACE TIME: lookups are pure
+python keyed on static shapes, so serve/scheduler executables bake the
+tuned blocks in and decode steps never recompile.  Keys carry the backend,
+the op, an M shape-class (gemv <= 8 rows, skinny <= 64, wide above -- decode
+batches land in gemv/skinny, prefill/train in wide) and the exact reduction
+geometry; anything not in the cache falls back to the built-in heuristics,
+so a missing or stale cache only costs performance, never correctness.
+Invalidation is by construction: keys are (backend, op, shape, config) and
+the file carries a ``version`` -- bump ``_CACHE_VERSION`` when a schedule's
+meaning changes and old entries are ignored wholesale.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+_CACHE_VERSION = 1
+_ENV_VAR = "REPRO_TUNING_CACHE"
+_DEFAULT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "..", "benchmarks",
+    "TUNING_CACHE.json")
+
+# in-memory cache state: loaded once per path, updated by the tuner
+_state: Dict[str, object] = {"path": None, "entries": None}
+
+
+def cache_path() -> str:
+    return os.path.abspath(os.environ.get(_ENV_VAR, _DEFAULT_PATH))
+
+
+def _entries() -> Dict[str, dict]:
+    path = cache_path()
+    if _state["entries"] is None or _state["path"] != path:
+        entries: Dict[str, dict] = {}
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if data.get("version") == _CACHE_VERSION:
+                entries = data.get("entries", {})
+        except (OSError, ValueError):
+            pass
+        _state["path"], _state["entries"] = path, entries
+    return _state["entries"]  # type: ignore[return-value]
+
+
+def lookup(key: str) -> Optional[dict]:
+    return _entries().get(key)
+
+
+def update(key: str, entry: dict) -> None:
+    _entries()[key] = entry
+    tuned_chunk_block.cache_clear()   # fresh entries take effect in-process
+
+
+def save(path: Optional[str] = None) -> str:
+    path = os.path.abspath(path or cache_path())
+    with open(path, "w") as f:
+        json.dump(dict(version=_CACHE_VERSION, entries=_entries()), f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def shape_class(m: int) -> str:
+    """M bucketing: decode steps are gemv/skinny, prefill/train are wide."""
+    if m <= 8:
+        return "gemv"
+    if m <= 64:
+        return "skinny"
+    return "wide"
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# fast-GEMM chunk block (any backend; the XLA serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def chunk_key(M: int, C: int, N: int, acc_len: int) -> str:
+    return f"{_backend()}|fast_gemm|{shape_class(M)}|C{C}|N{N}|L{acc_len}"
+
+
+@functools.lru_cache(maxsize=None)
+def tuned_chunk_block(M: int, C: int, N: int, acc_len: int) -> int:
+    """Chunk block for an (M, C*acc_len) x (C*acc_len, N) fast GEMM.
+
+    Cache hit -> the tuned block.  Miss -> heuristic: skinny M collapses
+    the scan to ONE step (the (C, M, N) partials already fit in cache and
+    per-step dispatch dominates), wide M keeps the cache-sized default.
+    """
+    e = lookup(chunk_key(M, C, N, acc_len))
+    if e is not None and "chunk_block" in e:
+        return max(1, int(e["chunk_block"]))
+    from ...core.ccim import _CHUNK_BLOCK, _SKINNY_M
+    return C if M <= _SKINNY_M else _CHUNK_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# skinny-M Pallas kernel blocks (TPU)
+# ---------------------------------------------------------------------------
+
+
+def skinny_key(K: int, N: int, acc_len: int, n_planes: int) -> str:
+    return f"{_backend()}|skinny_pallas|K{K}|N{N}|L{acc_len}|P{n_planes}"
+
+
+def tuned_skinny_blocks(K: int, N: int, acc_len: int,
+                        n_planes: int) -> Optional[Tuple[int, int]]:
+    """(bn, bk) override for the skinny kernel, or None for the pack-time
+    defaults (ops.pick_weight_blocks geometry)."""
+    e = lookup(skinny_key(K, N, acc_len, n_planes))
+    if e is not None and "bn" in e and "bk" in e:
+        return int(e["bn"]), int(e["bk"])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the search (off the serving path; benchmarks/autotune.py drives it)
+# ---------------------------------------------------------------------------
+
+
+def _time_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _chunk_candidates(C: int) -> Tuple[int, ...]:
+    cands = {c for c in (2, 4, 8, 16, 32, 64) if c <= C}
+    cands.add(C)
+    return tuple(sorted(cands))
+
+
+_CHAIN = 16   # calls per timed executable: amortizes per-dispatch overhead
+
+
+def autotune_chunk_block(M: int, K: int, N: int, cfg=None, seed: int = 0,
+                         iters: int = 5) -> dict:
+    """Search the fast-GEMM chunk block for one (M, K, N) shape and record
+    the winner in the in-memory cache (call ``save`` to persist).
+
+    Times a CHAIN of data-dependent prepacked serving ops (activation
+    quantization included) inside one executable: a single-call timing is
+    dominated by per-dispatch overhead that vanishes inside the compiled
+    decode loop, which used to crown noise as the winner.  The chain uses
+    a float dependency (0.0 * y) on purpose -- an integer one would be
+    constant-folded and the whole chain CSE'd into one call.
+    """
+    import jax
+    from ...core.ccim import DEFAULT_CONFIG, _pad_to_chunks
+    from ...core.engine import pack_cim_weights, packed_cim_matmul
+
+    cfg = cfg or DEFAULT_CONFIG
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (M, K))
+    packed = pack_cim_weights(jax.random.normal(k2, (K, N)), cfg)
+    C = _pad_to_chunks(K, cfg.acc_len)
+
+    results = {}
+    for cb in _chunk_candidates(C):
+        def chain(v, p, cb=cb):
+            o = None
+            y = v
+            for _ in range(_CHAIN):
+                o = packed_cim_matmul(y, p, cfg, use_pallas=False,
+                                      chunk_block=cb)
+                y = v + 0.0 * o[:1, :1]
+            return o
+        fn = jax.jit(chain)
+        results[cb] = round(_time_us(fn, x, packed, iters=iters) / _CHAIN, 1)
+    best = min(results, key=results.get)
+    entry = dict(chunk_block=int(best), us=results[best],
+                 candidates_us={str(c): u for c, u in results.items()},
+                 M=M, K=K, N=N)
+    update(chunk_key(M, C, N, cfg.acc_len), entry)
+    return entry
+
+
+def autotune_skinny_pallas(M: int, K: int, N: int, cfg=None, seed: int = 0,
+                           iters: int = 5) -> Optional[dict]:
+    """Search (bn, bk) for the skinny-M prepacked Pallas kernel (TPU only:
+    interpret-mode timings would tune the emulator, not the hardware)."""
+    if _backend() != "tpu":
+        return None
+    import jax
+    from ...core.ccim import DEFAULT_CONFIG
+    from ...core.engine import pack_cim_weights
+    from . import ops
+
+    cfg = cfg or DEFAULT_CONFIG
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x_q = jax.random.randint(k1, (M, K), -127, 128).clip(-127, 127)
+    packed = pack_cim_weights(jax.random.normal(k2, (K, N)), cfg)
+    _, _, Np, Kp = ops.pick_weight_blocks(K, N, cfg.acc_len)
+    n_planes = packed.pallas_planes.shape[0]
+
+    results = {}
+    for bn in (128, 256, 512):
+        for bk in (128, 256, 512, 1024):
+            if Np % bn or Kp % bk or bk % cfg.acc_len or bk % 32:
+                continue
+            import functools as ft
+            import jax as _jax
+            fn = _jax.jit(ft.partial(
+                ops.ccim_matmul_int_prepacked, k_dim=K, n_dim=N,
+                acc_len=cfg.acc_len, use_pallas=True, interpret=False,
+                skinny_blocks=(bn, bk)))
+            results[(bn, bk)] = round(
+                _time_us(fn, x_q, packed.pallas_w, packed.pallas_planes,
+                         iters=iters), 1)
+    if not results:
+        return None
+    best = min(results, key=results.get)
+    entry = dict(bn=best[0], bk=best[1], us=results[best],
+                 candidates_us={f"{b[0]}x{b[1]}": u
+                                for b, u in results.items()}, M=M)
+    # keyed on the PADDED dims: that is what the dispatcher looks up
+    # (ops.ccim_matmul_int_prepacked consults tuned_skinny_blocks(Kp, Np))
+    update(skinny_key(Kp, Np, cfg.acc_len, n_planes), entry)
+    return entry
+
+
+def autotune_shapes(shapes: Iterable[Tuple[int, int, int]], cfg=None,
+                    iters: int = 5) -> Dict[str, dict]:
+    """Tune every (M, K, N) in ``shapes`` on the current backend; clears
+    the lookup memo so freshly tuned blocks take effect in-process."""
+    out = {}
+    for (M, K, N) in shapes:
+        out[f"fast_gemm {M}x{K}x{N}"] = autotune_chunk_block(
+            M, K, N, cfg, iters=iters)
+        sk = autotune_skinny_pallas(M, K, N, cfg, iters=iters)
+        if sk is not None:
+            out[f"skinny_pallas {M}x{K}x{N}"] = sk
+    tuned_chunk_block.cache_clear()
+    return out

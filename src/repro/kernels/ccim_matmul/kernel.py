@@ -203,6 +203,124 @@ def ccim_matmul_prepacked_pallas(
     )(*operands)
 
 
+SKINNY_SUBLANE = 32   # int8 sublane tile: the skinny path pads M to this
+
+
+def _ccim_kernel_prepacked_skinny(*refs, bk: int, n_k: int, acc_len: int,
+                                  x_bits: tuple, dcim_lsb: int,
+                                  adc_half: int):
+    """Decode-shaped (skinny-M) prepacked variant.
+
+    Same macro arithmetic as ``_ccim_kernel_prepacked``, different
+    schedule, built for M of a decode batch (<= 32 rows):
+
+      * M is padded ONCE to the int8 sublane width (32) instead of the
+        128-lane MXU block -- a 4x cut in wasted rows at M=4;
+      * the folded DCIM planes for the current N tile arrive as ONE
+        full-K resident block (index map ignores the k grid axis), so
+        they stay in VMEM across the whole K-loop and are sliced
+        in-kernel per k step;
+      * only the weight tile streams with k -- the grid's innermost axis
+        -- which the Pallas pipeline double-buffers automatically.
+
+    VMEM cost of the residency is n_planes * K * bn int8 bytes; the
+    dispatcher (ops.ccim_matmul_int_prepacked) checks the budget and
+    falls back to the general kernel when it does not fit.
+    """
+    if x_bits:
+        x_ref, w_ref, planes_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)            # (Mp, bk)
+    w = w_ref[...].astype(jnp.int32)            # (bk, bn)
+    bm, bn = x.shape[0], w.shape[1]
+    c = bk // acc_len
+
+    to_xc = lambda v: v.reshape(bm, c, acc_len).swapaxes(0, 1)  # (C, Mp, L)
+    to_wc = lambda v: v.reshape(c, acc_len, bn)                 # (C, L, bn)
+    exact = _chunk_dot(to_xc(x), to_wc(w))
+
+    dcim = jnp.zeros_like(exact)
+    if x_bits:
+        sx = jnp.where(x < 0, -1, 1)
+        mx = jnp.abs(x)
+        for i, j in enumerate(x_bits):
+            xj = sx * ((mx >> j) & 1)
+            # K-resident planes: slice this k step's rows in-register
+            pj = planes_ref[i, pl.ds(k_step * bk, bk), :].astype(jnp.int32)
+            dcim = dcim + _chunk_dot(to_xc(xj), to_wc(pj))
+
+    acim = exact - dcim * dcim_lsb
+    code = jnp.clip(
+        jnp.floor_divide(acim + dcim_lsb // 2, dcim_lsb),
+        -adc_half, adc_half - 1,
+    )
+    acc_ref[...] += jnp.sum(dcim + code, axis=0) * dcim_lsb
+
+    @pl.when(k_step == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "bk", "acc_len", "x_bits", "dcim_lsb",
+                              "adc_half", "interpret")
+)
+def ccim_matmul_prepacked_skinny_pallas(
+    x_q: jax.Array,           # (Mp, K) int8, Mp a SKINNY_SUBLANE multiple
+    w_q: jax.Array,           # (K, N) int8
+    planes: jax.Array,        # (n_planes, K, N) int8 folded DCIM planes
+    *,
+    bn: int = 128,
+    bk: int = 512,
+    acc_len: int = ACC_LEN,
+    x_bits: tuple = (6, 5),
+    dcim_lsb: int = DCIM_LSB,
+    adc_half: int = ADC_HALF,
+    interpret: bool = False,
+) -> jax.Array:
+    """Skinny-M prepacked hybrid-CIM GEMM -> (Mp, N) int32 at scale
+    dcim_lsb; bit-identical to ``ccim_matmul_prepacked_pallas`` (see
+    ``_ccim_kernel_prepacked_skinny`` for the schedule)."""
+    Mp, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2
+    assert planes.shape == (len(x_bits), K, N), (planes.shape, x_bits)
+    assert Mp % SKINNY_SUBLANE == 0, Mp
+    assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
+    assert bk % acc_len == 0 and bk % SKINNY_SUBLANE == 0, (bk, acc_len)
+    n_k = K // bk
+
+    kernel = functools.partial(
+        _ccim_kernel_prepacked_skinny, bk=bk, n_k=n_k, acc_len=acc_len,
+        x_bits=tuple(x_bits), dcim_lsb=dcim_lsb, adc_half=adc_half)
+    # grid: N tiles outer, K inner (sequential accumulation); x streams
+    # (Mp, bk), w streams (bk, bn) double-buffered, planes are RESIDENT
+    # full-K blocks per N tile (their index map ignores k)
+    in_specs = [pl.BlockSpec((Mp, bk), lambda j, k: (0, k)),
+                pl.BlockSpec((bk, bn), lambda j, k: (k, j))]
+    operands = [x_q, w_q]
+    if x_bits:
+        in_specs.append(pl.BlockSpec((len(x_bits), K, bn),
+                                     lambda j, k: (0, 0, j)))
+        operands.append(planes)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Mp, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((Mp, bn), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )

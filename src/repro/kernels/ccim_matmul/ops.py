@@ -10,9 +10,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import (ACC_LEN, DCIM_LSB, ccim_matmul_pallas,
-                     ccim_matmul_prepacked_pallas)
+from .kernel import (ACC_LEN, DCIM_LSB, SKINNY_SUBLANE, ccim_matmul_pallas,
+                     ccim_matmul_prepacked_pallas,
+                     ccim_matmul_prepacked_skinny_pallas)
 from .ref import ccim_matmul_ref
+
+# VMEM budget (bytes) the skinny kernel's plane residency may claim; above
+# this the dispatcher keeps the general streaming kernel (16 MiB VMEM on
+# current TPUs; leave headroom for the double-buffered w stream + output)
+SKINNY_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def _pad_to(v: int, m: int) -> int:
@@ -79,6 +85,7 @@ def ccim_matmul_int_prepacked(
     dcim_lsb: int = DCIM_LSB,
     adc_bits: int = 7,
     use_pallas: bool | None = None, interpret: bool | None = None,
+    skinny_blocks: tuple | None = None,
 ) -> jax.Array:
     """Prepacked-weight macro GEMM: only the activations are padded and
     decomposed per call.  Bit-identical to ``cim_matmul_int`` (fast
@@ -87,6 +94,13 @@ def ccim_matmul_int_prepacked(
     activation bit index per folded plane; the plane COUNT is the plan's
     ``n_dcim_products`` grouped by x bit), ``dcim_lsb``, ``adc_bits`` and
     ``acc_len`` -- so one kernel serves every deployment-plan design point.
+
+    Decode-shaped calls (M <= SKINNY_SUBLANE) route to the skinny-M kernel
+    -- M padded to the int8 sublane width instead of the 128-lane MXU
+    block, folded planes VMEM-resident across the K-loop -- with (bn, bk)
+    from the persisted tuning cache (autotune.tuned_skinny_blocks) when
+    available; ``skinny_blocks`` forces a candidate (the autotuner's
+    search hook).  All routes are bit-identical.
     """
     on_tpu = jax.default_backend() == "tpu"
     if use_pallas is None:
@@ -108,6 +122,25 @@ def ccim_matmul_int_prepacked(
         xp = jnp.pad(x_q, ((0, 0), (0, Kp - K)))
         return ccim_matmul_ref(xp.astype(jnp.int32),
                                w_q.astype(jnp.int32))[:, :n_dim]
+    n_planes = len(x_bits)
+    if M <= SKINNY_SUBLANE:
+        from . import autotune
+        if skinny_blocks is None:
+            skinny_blocks = (autotune.tuned_skinny_blocks(
+                Kp, Np, acc_len, n_planes) or (bn, bk))
+        sbn, sbk = skinny_blocks
+        fits = (max(n_planes, 1) * Kp * sbn <= SKINNY_VMEM_BUDGET
+                and Np % sbn == 0 and Kp % sbk == 0
+                and sbk % acc_len == 0 and sbk % SKINNY_SUBLANE == 0)
+        if fits:
+            xp = jnp.pad(x_q, ((0, SKINNY_SUBLANE - M), (0, Kp - K)))
+            y = ccim_matmul_prepacked_skinny_pallas(
+                xp.astype(jnp.int8), w_q, planes,
+                bn=sbn, bk=sbk, acc_len=acc_len, x_bits=tuple(x_bits),
+                dcim_lsb=dcim_lsb, adc_half=1 << (adc_bits - 1),
+                interpret=interpret,
+            )
+            return y[:M, :n_dim]
     bm = _pick_block(M, 128)
     Mp = _pad_to(M, bm)
     xp = jnp.pad(x_q, ((0, Mp - M), (0, Kp - K)))

@@ -44,7 +44,7 @@ from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
 def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, cim: bool = False, temperature: float = 0.0,
           seed: int = 0, pack: bool = True, return_stats: bool = False,
-          plan=None, noise_seed=None):
+          plan=None, noise_seed=None, fuse: bool = True):
     """Returns generated tokens (batch, gen); with ``return_stats=True``,
     returns (tokens, stats) where stats separates compile / pack /
     prefill / decode time -- prefill and decode steps are AOT-compiled up
@@ -55,12 +55,17 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     AOT-compiled prefill/decode executables serve the mixed-fidelity model
     with zero recompiles.  ``noise_seed`` turns on deterministic analog-
     noise emulation (cfg.cim_noise_seed) -- packed and unpacked serving
-    stay bit-identical under it.
+    stay bit-identical under it.  ``fuse`` (default on) enables horizontal
+    projection fusion (cfg.cim_fuse): plan-compatible QKV / gate-up /
+    mamba-input projections execute as one wide macro GEMM each, tokens
+    bit-identical to the unfused path (``fuse=False`` is the A/B baseline).
     """
     cfg = get_config(arch, smoke=smoke)
     if plan is not None:
         cim = True
         cfg = dataclasses.replace(cfg, cim_plan=plan)
+    if not fuse:
+        cfg = dataclasses.replace(cfg, cim_fuse=False)
     if noise_seed is not None:
         if not cim:
             raise ValueError(
@@ -172,7 +177,7 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                      stop_lengths=(4, 16, 8, 12), cim: bool = False,
                      pack: bool = True, temperature: float = 0.0,
                      seed: int = 0, compare_lockstep: bool = True,
-                     repeats: int = 1, plan=None):
+                     repeats: int = 1, plan=None, fuse: bool = True):
     """Continuous-batching driver: a mixed-length request queue served
     from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
 
@@ -189,6 +194,8 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     if plan is not None:
         cim = True
         cfg = dataclasses.replace(cfg, cim_plan=plan)
+    if not fuse:
+        cfg = dataclasses.replace(cfg, cim_fuse=False)
     if cim:
         cfg = dataclasses.replace(cfg, cim_mode=True)
     pack = pack and cim

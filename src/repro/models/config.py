@@ -74,6 +74,12 @@ class ModelConfig:
     # planned model still compiles to one executable per step -- zero
     # recompiles across decode steps.
     cim_plan: Optional["DeploymentPlan"] = None
+    # Horizontal projection fusion (decode hot path): projections that
+    # consume the same input activation AND resolve to the same plan entry
+    # (QKV, gate/up, the mamba2 input projections) execute as ONE wide
+    # macro GEMM -- bit-identical per projection (see DESIGN.md section 9).
+    # Static, so fused and unfused models are separate jit cache entries.
+    cim_fuse: bool = True
     # Deterministic analog-noise emulation for CIM serving: when set, every
     # _dense projection derives its own noise stream by folding this seed
     # with the projection path (shared across scanned depth -- the same

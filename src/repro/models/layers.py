@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ccim import DEFAULT_CONFIG
-from ..core.engine import CimEngine, PackedCimWeights
+from ..core.engine import (CimEngine, FusedPackedCimWeights,
+                           PackedCimWeights)
 from .config import ModelConfig
 
 Array = jax.Array
@@ -99,6 +100,119 @@ def _dense(x: Array, w, cfg: ModelConfig, path: Optional[str] = None) -> Array:
             return x @ w
         return eng.matmul(x, w, _dense_noise_key(cfg, path))
     return x @ w
+
+
+FUSED_SEP = "+"   # fused param-leaf key: member names joined, e.g. "wq+wk+wv"
+
+
+def fusion_partitions(cfg: ModelConfig, prefix: str, names) -> list:
+    """Partition fusion-candidate projections (which share one input
+    activation) by resolved plan entry: [(entry_cfg, fidelity, members)]
+    for every partition of two or more fusable members.
+
+    The ONE definition of group compatibility -- pack time
+    (lm._pack_tree) and trace time (_dense_group) must agree, or fused
+    packs would go unconsumed.  Only 'fast'/'exact' fuse: 'float'
+    bypasses the macro, and the broadcast/bit_true fidelities draw noise
+    with non-column-local shapes.
+    """
+    part: Dict[Tuple, list] = {}
+    for n in names:
+        eng = cim_engine(cfg, prefix + n)
+        if eng.fidelity in ("fast", "exact"):
+            part.setdefault((eng.cfg, eng.fidelity), []).append(n)
+    return [(c, f, g) for (c, f), g in part.items() if len(g) >= 2]
+
+
+def _split_segments(y: Array, names, dims) -> Dict[str, Array]:
+    """Split a fused (..., sum(dims)) output back into per-projection
+    results at the static per-segment N-offsets."""
+    offs = np.cumsum((0,) + tuple(dims))
+    return {n: jax.lax.slice_in_dim(y, int(offs[i]), int(offs[i + 1]),
+                                    axis=-1)
+            for i, n in enumerate(names)}
+
+
+def _seg_noise(cfg: ModelConfig, prefix: str, names) -> Optional[Tuple]:
+    """Per-segment noise keys for a fused group -- each segment draws the
+    SAME stream its unfused projection would (path-folded seed), which is
+    what keeps fusion bit-identical under analog-noise emulation."""
+    if cfg.cim_noise_seed is None:
+        return None
+    return tuple(_dense_noise_key(cfg, prefix + n) for n in names)
+
+
+def _dense_fused(x: Array, leaf: FusedPackedCimWeights, cfg: ModelConfig,
+                 prefix: str, names) -> Dict[str, Array]:
+    """Serve one pack-time-fused projection group (lm.pack_cim_params):
+    one activation quantization + one wide macro GEMM, split per segment."""
+    if not cfg.cim_mode:
+        raise ValueError(
+            "fused packed CIM weights require cim_mode=True (packed params "
+            "are macro array contents, not float matrices)")
+    eng = cim_engine(cfg, prefix + names[0])
+    if eng.fidelity == "float":
+        raise ValueError(
+            f"plan assigns fidelity 'float' to {prefix}{names[0]!r} but the "
+            "group was packed as macro array contents; re-pack under the "
+            "serving plan (pack_cim_params fuses by the plan's entries)")
+    for s in names[1:]:
+        e2 = cim_engine(cfg, prefix + s)
+        if (e2.cfg, e2.fidelity) != (eng.cfg, eng.fidelity):
+            raise ValueError(
+                f"fused group {prefix}{'+'.join(names)} was packed under one "
+                f"plan entry, but the serving plan resolves {prefix}{s!r} "
+                f"differently ({e2.fidelity} vs {eng.fidelity}); re-pack "
+                "under the serving plan (the unfused path would refuse the "
+                "same mismatch)")
+    y = eng.matmul(x, leaf, _seg_noise(cfg, prefix, names))
+    return _split_segments(y, names, leaf.seg_dims)
+
+
+def _dense_group(x: Array, p: Params, names, cfg: ModelConfig,
+                 prefix: str) -> Dict[str, Array]:
+    """Run a block's projections that all consume ``x``, fusing plan-
+    compatible sites into one wide macro GEMM (DESIGN.md section 9).
+
+    Three routes, every one bit-identical per projection to ``_dense``:
+      * pack-time fused leaves (``FusedPackedCimWeights``, key
+        "wq+wk+wv") -- the packed serving hot path.  These are ALWAYS
+        served fused: the leaf structure is the execution plan, and
+        ``cfg.cim_fuse`` governs grouping at pack/trace time, not how an
+        already-fused pack executes (re-pack with cim_fuse=False for a
+        per-projection pack);
+      * trace-time fusion of raw float weights under cim_mode and
+        cfg.cim_fuse: members resolving to the same plan entry
+        concatenate along N for the call (unpacked serving / QAT get the
+        same 7 -> ~3 GEMM collapse);
+      * everything else (float fidelity, heterogeneous entries, cim off,
+        cfg.cim_fuse=False) falls through to per-projection ``_dense``.
+    """
+    remaining = list(names)
+    out: Dict[str, Array] = {}
+    for key, leaf in p.items():
+        if isinstance(leaf, FusedPackedCimWeights):
+            segs = key.split(FUSED_SEP)
+            if all(s in remaining for s in segs):
+                out.update(_dense_fused(x, leaf, cfg, prefix, segs))
+                remaining = [n for n in remaining if n not in segs]
+    if cfg.cim_mode and cfg.cim_fuse and len(remaining) > 1:
+        fusable = [n for n in remaining
+                   if p.get(n) is not None
+                   and not isinstance(p[n], PackedCimWeights)]
+        for ecfg, fid, g in fusion_partitions(cfg, prefix, fusable):
+            eng = CimEngine(cfg=ecfg, fidelity=fid,
+                            use_pallas=cfg.cim_use_pallas)
+            wcat = jnp.concatenate([p[n] for n in g], axis=-1)
+            dims = tuple(int(p[n].shape[-1]) for n in g)
+            nkeys = _seg_noise(cfg, prefix, g)
+            y = eng.matmul(x, wcat, nkeys,
+                           noise_segments=dims if nkeys else None)
+            out.update(_split_segments(y, g, dims))
+            remaining = [n for n in remaining if n not in g]
+    for n in remaining:
+        out[n] = _dense(x, p[n], cfg, prefix + n)
+    return out
 
 
 def _init_dense(key, d_in, d_out, axes, scale=None, dtype=jnp.bfloat16):
@@ -237,9 +351,10 @@ def _qkv(p, x, cfg: ModelConfig, positions, path="attn"):
     B, S, _ = x.shape
     dh = cfg.head_dim
     hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
-    q = _dense(x, p["wq"], cfg, f"{path}/wq").reshape(B, S, hq, dh)
-    k = _dense(x, p["wk"], cfg, f"{path}/wk").reshape(B, S, hkv, dh)
-    v = _dense(x, p["wv"], cfg, f"{path}/wv").reshape(B, S, hkv, dh)
+    qkv = _dense_group(x, p, ("wq", "wk", "wv"), cfg, f"{path}/")
+    q = qkv["wq"].reshape(B, S, hq, dh)
+    k = qkv["wk"].reshape(B, S, hkv, dh)
+    v = qkv["wv"].reshape(B, S, hkv, dh)
     q, k, v = _head_constraints(q, k, v)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -464,8 +579,8 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=jnp.bfloat
 
 def mlp_apply(p: Params, x: Array, cfg: ModelConfig, path: str = "mlp") -> Array:
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    h = act(_dense(x, p["w1"], cfg, f"{path}/w1")) * _dense(
-        x, p["w3"], cfg, f"{path}/w3")
+    gu = _dense_group(x, p, ("w1", "w3"), cfg, f"{path}/")
+    h = act(gu["w1"]) * gu["w3"]
     return _dense(h, p["w2"], cfg, f"{path}/w2")
 
 
@@ -666,10 +781,8 @@ def mamba2_apply(p: Params, x: Array, cfg: ModelConfig,
     """x (B,S,D). Returns (y, (new_ssm_state, new_conv_state))."""
     B, S, D = x.shape
     DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    z = _dense(x, p["w_z"], cfg, "mamba/w_z")
-    xc = _dense(x, p["w_x"], cfg, "mamba/w_x")
-    BCc = _dense(x, p["w_bc"], cfg, "mamba/w_bc")
-    dt_raw = _dense(x, p["w_dt"], cfg, "mamba/w_dt")
+    proj = _dense_group(x, p, ("w_z", "w_x", "w_bc", "w_dt"), cfg, "mamba/")
+    z, xc, BCc, dt_raw = (proj[n] for n in ("w_z", "w_x", "w_bc", "w_dt"))
     cs_x = cs_bc = None
     if conv_state is not None:
         cs_x, cs_bc = conv_state

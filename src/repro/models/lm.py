@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine import FusedPackedCimWeights
 from . import layers as L
 from .config import ModelConfig
 
@@ -174,19 +175,75 @@ def iter_packable_paths(params: Params) -> Dict[str, Tuple[int, ...]]:
     return sites
 
 
+# Projection groups that consume the same input activation -- the fusion
+# candidates (models.layers._dense_group consumes the fused leaves).  Which
+# members actually fuse is decided per group by the deployment plan: only
+# members resolving to the SAME PlanEntry pack together.
+_FUSE_GROUPS = (("wq", "wk", "wv"),            # attention QKV
+                ("w1", "w3"),                  # SwiGLU gate/up
+                ("w_z", "w_x", "w_bc", "w_dt"))  # mamba2 input projections
+
+
+def _pack_single(path: str, v, cfg: ModelConfig):
+    eng = L.cim_engine(cfg, path)
+    if eng.fidelity == "float":              # plan keeps this site off-macro
+        return v
+    if v.ndim == 2:                          # (K, N): shared-block weights
+        return eng.pack(v)
+    if v.ndim == 3:                          # (layers, K, N): scanned stack
+        return jax.vmap(eng.pack)(v)
+    return v                                 # MoE expert tensors etc.
+
+
+def _pack_tree(tree: Params, cfg: ModelConfig, path=()) -> Params:
+    """Fusion-aware packing walk (see pack_cim_params).
+
+    At every dict level, each fusion-candidate group splits into
+    partitions by resolved PlanEntry; partitions of two or more sites
+    concatenate along N and pack as ONE ``FusedPackedCimWeights`` under a
+    "wq+wk+wv"-style key (per-channel scales and quantization are column-
+    local, so the fused pack is bit-identical per segment to the separate
+    packs).  Everything else packs -- or stays raw -- exactly as before.
+    """
+    def packable(k):
+        return (k in _CIM_PACKABLE
+                and not (len(path) >= 1 and path[-1] == "moe"))
+
+    out = dict(tree)
+    consumed = set()
+    if cfg.cim_fuse:
+        for members in _FUSE_GROUPS:
+            present = [m for m in members
+                       if not isinstance(tree.get(m), dict)
+                       and getattr(tree.get(m), "ndim", 0) in (2, 3)
+                       and packable(m)]
+            if len(present) < 2:
+                continue
+            prefix = "/".join(path) + "/" if path else ""
+            for ecfg, fid, g in L.fusion_partitions(cfg, prefix, present):
+                eng = L.CimEngine(cfg=ecfg)
+                wcat = jnp.concatenate([tree[m] for m in g], axis=-1)
+                pk = (jax.vmap(eng.pack)(wcat) if wcat.ndim == 3
+                      else eng.pack(wcat))
+                out[L.FUSED_SEP.join(g)] = FusedPackedCimWeights(
+                    packed=pk, seg_names=tuple(g),
+                    seg_dims=tuple(int(tree[m].shape[-1]) for m in g))
+                consumed.update(g)
+    for k, v in tree.items():
+        if k in consumed:
+            del out[k]
+            continue
+        sub = path if k == "layers" else path + (k,)
+        if isinstance(v, dict):
+            out[k] = _pack_tree(v, cfg, sub)
+        elif packable(k):
+            out[k] = _pack_single("/".join(sub), v, cfg)
+    return out
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def _pack_cim_params_jit(params: Params, cfg: ModelConfig) -> Params:
-    def pack_one(path, v):
-        eng = L.cim_engine(cfg, path)
-        if eng.fidelity == "float":          # plan keeps this site off-macro
-            return v
-        if v.ndim == 2:                      # (K, N): shared-block weights
-            return eng.pack(v)
-        if v.ndim == 3:                      # (layers, K, N): scanned stack
-            return jax.vmap(eng.pack)(v)
-        return v                             # MoE expert tensors etc.
-
-    return _walk_packable(params, pack_one)
+    return _pack_tree(params, cfg)
 
 
 def pack_cim_params(params: Params, cfg: ModelConfig) -> Params:
@@ -210,6 +267,13 @@ def pack_cim_params(params: Params, cfg: ModelConfig) -> Params:
     config as static pytree metadata, so mixed packs coexist in one
     compiled step -- and plan-fidelity "float" sites stay raw float
     matrices (served as plain matmuls).
+
+    With cfg.cim_fuse (the default) plan-compatible projections that share
+    an input activation (QKV; gate/up; the mamba2 input projections) pack
+    as ONE wide ``FusedPackedCimWeights`` leaf with per-segment N-offsets
+    -- the decode hot path then runs ~3 wide GEMMs per block instead of ~7
+    skinny ones, with per-projection outputs (and noise streams) still
+    bit-identical to the unfused pack (see DESIGN.md section 9).
     """
     if not cfg.cim_mode:
         raise ValueError("pack_cim_params requires cfg.cim_mode=True")

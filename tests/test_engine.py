@@ -235,15 +235,27 @@ def test_serve_packed_matches_unpacked():
 
 def test_pack_cim_params_structure():
     from repro.configs import get_config
+    from repro.core import FusedPackedCimWeights
     from repro.models import lm
     cfg = dataclasses.replace(get_config("minicpm-2b", smoke=True),
                               cim_mode=True)
     params, _ = lm.init(jax.random.PRNGKey(0), cfg, pack_cim=True)
     blk = params["layers"]
-    assert isinstance(blk["attn"]["wq"], PackedCimWeights)
-    assert isinstance(blk["mlp"]["w1"], PackedCimWeights)
+    # plan-compatible input-sharing groups fuse into ONE wide pack each
+    qkv = blk["attn"]["wq+wk+wv"]
+    assert isinstance(qkv, FusedPackedCimWeights)
+    assert qkv.seg_names == ("wq", "wk", "wv")
+    assert sum(qkv.seg_dims) == qkv.packed.n_dim
+    assert isinstance(blk["mlp"]["w1+w3"], FusedPackedCimWeights)
+    # wo/w2 consume different activations -> stay individually packed
+    assert isinstance(blk["attn"]["wo"], PackedCimWeights)
+    assert isinstance(blk["mlp"]["w2"], PackedCimWeights)
     # stacked leading layer axis survives packing (scan-sliceable)
-    assert blk["attn"]["wq"].mag.shape[0] == cfg.n_layers
+    assert qkv.packed.mag.shape[0] == cfg.n_layers
     # non-projection leaves stay float
     assert not isinstance(params["embed"], PackedCimWeights)
     assert not isinstance(blk["ln1"], PackedCimWeights)
+    # fusion off -> the PR-2 per-projection structure
+    cfg0 = dataclasses.replace(cfg, cim_fuse=False)
+    p0, _ = lm.init(jax.random.PRNGKey(0), cfg0, pack_cim=True)
+    assert isinstance(p0["layers"]["attn"]["wq"], PackedCimWeights)

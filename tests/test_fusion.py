@@ -1,0 +1,225 @@
+"""Horizontal projection fusion + skinny-M decode kernels: fused execution
+must be a pure scheduling transform -- per-projection outputs (including
+the analog-noise draw), per-request tokens and every kernel route stay
+bit-identical to the unfused/per-projection baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import plan as P
+from repro.configs import get_config
+from repro.core import (DEFAULT_CONFIG, FusedPackedCimWeights,
+                        PackedCimWeights, cim_matmul, pack_cim_weights)
+from repro.core.engine import packed_cim_matmul
+from repro.models import lm
+
+D = DEFAULT_CONFIG
+
+
+def _entry(label, **kw):
+    return P.PlanEntry(cfg=dataclasses.replace(D, **kw), fidelity="fast",
+                       label=label)
+
+
+def _model(arch="minicpm-2b", seed=0, seq=8):
+    cfg = get_config(arch, smoke=True)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (1, seq), 0,
+                              cfg.vocab_size)
+    return cfg, params, jnp.asarray(toks)
+
+
+def _logits(params, cfg, toks):
+    y, _ = lm.forward(params, cfg, toks, remat=False)
+    return np.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# fused == unfused, packed and unpacked, across model families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "mamba2-130m",
+                                  "qwen2-moe-a2.7b", "zamba2-1.2b"])
+def test_fused_forward_bit_identical(arch):
+    """QKV / gate-up / mamba-input / shared-block fusion across families:
+    fused forward == unfused forward, for raw AND prepacked weights."""
+    cfg, params, toks = _model(arch)
+    on = dataclasses.replace(cfg, cim_mode=True)
+    off = dataclasses.replace(on, cim_fuse=False)
+    ref = _logits(params, off, toks)
+    np.testing.assert_array_equal(ref, _logits(params, on, toks))
+    np.testing.assert_array_equal(
+        ref, _logits(lm.pack_cim_params(params, off), off, toks))
+    np.testing.assert_array_equal(
+        ref, _logits(lm.pack_cim_params(params, on), on, toks))
+
+
+def test_fused_noise_streams_bit_identical():
+    """Per-segment noise draws: fusion must reproduce each projection's
+    OWN path-folded noise stream, not one wide draw."""
+    cfg, params, toks = _model()
+    on = dataclasses.replace(cfg, cim_mode=True, cim_noise_seed=13)
+    off = dataclasses.replace(on, cim_fuse=False)
+    ref = _logits(params, off, toks)
+    np.testing.assert_array_equal(ref, _logits(params, on, toks))
+    np.testing.assert_array_equal(
+        ref, _logits(lm.pack_cim_params(params, on), on, toks))
+
+
+# ---------------------------------------------------------------------------
+# plan-keyed grouping: mixed plans fuse only entry-compatible sites
+# ---------------------------------------------------------------------------
+
+
+HETERO = P.DeploymentPlan.from_dict({
+    "attn/wq": _entry("hybrid5/adc8", n_dcim_products=5, adc_bits=8),
+    "mlp/w1": P.FLOAT_ENTRY,
+    "mlp/w2": P.DIGITAL_ENTRY,
+}, default=_entry("hybrid3/adc8/L32", acc_len=32, adc_bits=8))
+
+
+def test_heterogeneous_plan_splits_groups():
+    cfg, params, toks = _model()
+    pcfg = dataclasses.replace(cfg, cim_mode=True, cim_plan=HETERO,
+                               cim_noise_seed=3)
+    packed = lm.pack_cim_params(params, pcfg)
+    blk = packed["layers"]
+    # wq's entry differs -> wk+wv fuse without it; w1 is float -> no w1+w3
+    assert isinstance(blk["attn"]["wk+wv"], FusedPackedCimWeights)
+    assert isinstance(blk["attn"]["wq"], PackedCimWeights)
+    assert blk["attn"]["wq"].cfg.n_dcim_products == 5
+    assert "w1+w3" not in blk["mlp"] and "w1" in blk["mlp"]
+    # and the split grouping still serves bit-identically
+    off = dataclasses.replace(pcfg, cim_fuse=False)
+    ref = _logits(params, off, toks)
+    np.testing.assert_array_equal(ref, _logits(params, pcfg, toks))
+    np.testing.assert_array_equal(ref, _logits(packed, pcfg, toks))
+
+
+def test_exact_fidelity_sites_fuse():
+    """All-digital (exact) plans fuse too -- quantization-only sites have
+    column-local arithmetic just like the fast path."""
+    cfg, params, toks = _model()
+    pcfg = dataclasses.replace(
+        cfg, cim_mode=True,
+        cim_plan=P.DeploymentPlan.uniform(P.DIGITAL_ENTRY))
+    packed = lm.pack_cim_params(params, pcfg)
+    assert isinstance(packed["layers"]["attn"]["wq+wk+wv"],
+                      FusedPackedCimWeights)
+    off = dataclasses.replace(pcfg, cim_fuse=False)
+    np.testing.assert_array_equal(_logits(params, off, toks),
+                                  _logits(packed, pcfg, toks))
+
+
+# ---------------------------------------------------------------------------
+# serving: lock-step driver and continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_serve_fused_tokens_match_unfused():
+    from repro.launch.serve import serve
+    ref = serve("minicpm-2b", smoke=True, batch=2, prompt_len=8, gen=4,
+                cim=True, pack=False, fuse=False)
+    for pack, fuse in ((False, True), (True, True)):
+        got = serve("minicpm-2b", smoke=True, batch=2, prompt_len=8, gen=4,
+                    cim=True, pack=pack, fuse=fuse)
+        np.testing.assert_array_equal(ref, got)
+
+
+def test_scheduler_fused_tokens_match_unfused():
+    """Continuous batching over fused packed weights: per-request tokens
+    identical to the unfused scheduler run (and, inside serve_continuous,
+    to the lock-step baseline)."""
+    from repro.launch.serve import serve_continuous
+    kw = dict(smoke=True, slots=2, prompt_len=8, n_requests=4,
+              stop_lengths=(3, 5, 4, 2), cim=True, pack=True)
+    toks_off, st_off = serve_continuous("minicpm-2b", fuse=False, **kw)
+    toks_on, st_on = serve_continuous("minicpm-2b", fuse=True, **kw)
+    assert st_off["tokens_match_lockstep"] and st_on["tokens_match_lockstep"]
+    for rid in toks_off:
+        np.testing.assert_array_equal(toks_off[rid], toks_on[rid])
+
+
+# ---------------------------------------------------------------------------
+# skinny-M decode kernels (Pallas interpret parity) + chunk-block schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1, 128, 128), (4, 1024, 256),
+                                   (32, 96, 8)])
+def test_skinny_pallas_kernel_parity(shape):
+    """The skinny-M prepacked kernel (M padded to the int8 sublane, planes
+    VMEM-resident) is bit-identical to the fast-GEMM reference."""
+    M, K, N = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    p = pack_cim_weights(w, D)
+    u = cim_matmul(x, w, D, use_pallas=False)
+    q = cim_matmul(x, p, D, use_pallas=True)       # skinny route (M <= 32)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+@pytest.mark.parametrize("kw", [dict(n_dcim_products=0, adc_bits=9),
+                                dict(n_dcim_products=6),
+                                dict(acc_len=32, adc_bits=8)])
+def test_skinny_pallas_nondefault_splits(kw):
+    """Every deployment-plan design point routes through the skinny kernel
+    at decode shapes (plane count / ADC geometry as static meta)."""
+    cfg = dataclasses.replace(D, **kw)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (4, 160))
+    w = jax.random.normal(k2, (160, 64))
+    p = pack_cim_weights(w, cfg)
+    u = cim_matmul(x, w, cfg, use_pallas=False)
+    q = cim_matmul(x, p, cfg, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+def test_chunk_block_is_pure_scheduling():
+    """Any fast-GEMM chunk block gives bit-identical results (what makes
+    the autotuner numerics-free), including noisy fused-segment runs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(k1, (4, 200))
+    w = jax.random.normal(k2, (200, 24))
+    p = pack_cim_weights(w, D)
+    nk = jax.random.PRNGKey(7)
+    ka, kb = jax.random.split(nk)
+    ref = packed_cim_matmul(x, p, D, noise_key=(ka, kb), use_pallas=False,
+                            noise_segments=(10, 14))
+    for cb in (1, 3, 8, 64):
+        y = packed_cim_matmul(x, p, D, noise_key=(ka, kb), use_pallas=False,
+                              noise_segments=(10, 14), chunk_block=cb)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(y))
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    """Tuned entries persist, reload, and drive trace-time lookups; a
+    missing cache falls back to the heuristics."""
+    from repro.kernels.ccim_matmul import autotune as at
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "cache.json"))
+    at._state["entries"] = None          # drop state from other tests
+    at.tuned_chunk_block.cache_clear()
+    # heuristic fallback: skinny M collapses the scan to one step
+    assert at.tuned_chunk_block(4, 64, 256, 16) == 64
+    assert at.tuned_chunk_block(256, 64, 256, 16) == 16
+    entry = at.autotune_chunk_block(4, 256, 64, iters=1)
+    assert entry["chunk_block"] in [int(c) for c in entry["candidates_us"]]
+    path = at.save()
+    at._state["entries"] = None          # force reload from disk
+    at.tuned_chunk_block.cache_clear()
+    assert at.tuned_chunk_block(4, 16, 64, 16) == entry["chunk_block"]
+    # and the tuned block serves bit-identically to the default
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (4, 256))
+    p = pack_cim_weights(jax.random.normal(k2, (256, 64)), D)
+    np.testing.assert_array_equal(
+        np.asarray(packed_cim_matmul(x, p, D, use_pallas=False)),
+        np.asarray(packed_cim_matmul(x, p, D, use_pallas=False,
+                                     chunk_block=16)))
+    at._state["entries"] = None
+    at.tuned_chunk_block.cache_clear()

@@ -99,19 +99,25 @@ MIXED = P.DeploymentPlan.from_dict({
 
 
 def test_mixed_pack_structure_and_config_meta():
+    from repro.core import FusedPackedCimWeights
     cfg, params, _ = _model()
     pcfg = dataclasses.replace(cfg, cim_mode=True, cim_plan=MIXED)
     packed = lm.pack_cim_params(params, pcfg)
     blk = packed["layers"]
-    # float-fidelity site stays a raw float matrix
+    # float-fidelity site stays a raw float matrix (and blocks w1+w3 fusion)
     assert not isinstance(blk["mlp"]["w3"], PackedCimWeights)
+    assert "w1+w3" not in blk["mlp"]
     # every other site packs under ITS OWN entry's config (static meta)
     assert blk["mlp"]["w2"].cfg == D                      # digital: default
     assert blk["attn"]["wq"].cfg.n_dcim_products == 0
     # stacked pack: axis 0 is the scanned layer axis, axis 1 plane count
     assert blk["attn"]["wq"].pallas_planes.shape[1] == 0  # no folded planes
     assert blk["attn"]["wo"].cfg.n_dcim_products == 5
-    assert blk["attn"]["wk"].cfg.acc_len == 32            # plan default
+    # fusion is keyed by the plan: wq has its own entry, so only the
+    # entry-compatible wk/wv fuse (the group SPLITS, it doesn't disappear)
+    kv = blk["attn"]["wk+wv"]
+    assert isinstance(kv, FusedPackedCimWeights)
+    assert kv.packed.cfg.acc_len == 32                    # plan default
     assert blk["attn"]["wq"].mag.shape[0] == cfg.n_layers  # scan axis kept
 
 
