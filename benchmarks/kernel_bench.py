@@ -236,11 +236,16 @@ def run(seed: int = 0):
     ok_cd = (np.asarray(f_cd(cxz, cpk)) == np.asarray(f_cr(cxz, cpk))).all()
     if on_tpu:
         us_cd = time_us(f_cd, cxz, cpk, iters=16, warmup=4, reduce="min")
+        # A/B against the 4-pass prepacked GEMM at the SAME decode shape:
+        # the real-valued skinny row above has had this ratio since PR 5,
+        # the complex twin only recorded raw us
+        us_cr = time_us(f_cr, cxz, cpk, iters=16, warmup=4, reduce="min")
         emit("kern.decode_complex_fused_prepacked", us_cd,
-             f"{Mcd}x{Kcd}x{Ncd} skinny-M fused complex (compiled)")
+             f"{Mcd}x{Kcd}x{Ncd} skinny-M fused complex (compiled); "
+             f"{us_cr/us_cd:.2f}x vs 4-pass prepacked GEMM")
         record("decode_complex_fused_prepacked", (Mcd, Kcd, Ncd), us_cd,
-               None, "skinny-M prepacked fused complex kernel"
-               + ("" if ok_cd else "; MISMATCH"))
+               us_cr / us_cd, "vs 4-pass prepacked GEMM at decode shape "
+               "(bit-identical)" + ("" if ok_cd else "; MISMATCH"))
     else:
         emit("kern.decode_complex_fused_prepacked", 0.0,
              "interpret-mode parity: "

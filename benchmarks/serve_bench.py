@@ -1,27 +1,44 @@
 """Serving benchmark: prepacked-weight CIM decode vs the legacy per-call
-weight-conditioning path (and the fp/bf16 reference), plus the
+weight-conditioning path (and the fp/bf16 reference), the
 continuous-batching scheduler vs the lock-step loop on a mixed-length
-workload, written to BENCH_serve.json for the per-PR perf trajectory.
+workload, and plan-cascade speculative decoding (analog draft / deployed
+verify from one packed weight set), written to BENCH_serve.json for the
+per-PR perf trajectory.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 
 Measures pure-execution decode tok/s and prefill time (serve AOT-compiles
 both steps, so jit compile never pollutes a throughput number) plus the
-one-time pack cost.  The packed and unpacked
-CIM runs must emit bit-identical tokens: packing is a caching transform
-of the weight conditioning, not an approximation -- the benchmark asserts
-this before recording any number.
+one-time pack cost.  The packed and unpacked CIM runs must emit
+bit-identical tokens: packing is a caching transform of the weight
+conditioning, not an approximation -- the benchmark asserts this before
+recording any number.
 
-The continuous-batching rows (fp and packed-CIM) report aggregate tok/s,
-slot occupancy and p50/p95 request latency for a mixed-length queue
-(stop lengths 4/16/8/12 over 4x the slot count) against the lock-step
-wave baseline running on the SAME compiled executables.  serve_continuous
-asserts per-request tokens are bit-identical between the two plans, so a
-scheduler regression fails the benchmark (and CI) outright.
+Every serve-level RATIO is computed from the per-variant MEDIAN of
+``repeats`` runs, not a single draw: at smoke scale host scheduler noise
+swings single-run tok/s by 10-30%, which once produced a committed
+fusion speedup of 1.02x while the kernel benchmark showed 1.31x for the
+same fused shape.  Each row records the median and the raw per-run
+values so the spread is visible in the JSON.
+
+The continuous-batching rows (fp, packed-CIM, and a packed-unfused A/B)
+report aggregate tok/s, slot occupancy and p50/p95 request latency for a
+mixed-length queue against the lock-step wave baseline running on the
+SAME compiled executables; serve_continuous asserts per-request tokens
+are bit-identical between the two plans.
+
+The speculative section is the acceptance-vs-D/A-split study: the draft
+plan is the all-analog shadow of the serving plan (same packed weights),
+and narrowing its SAR below the no-clip width drafts faster but clips
+large accumulates, so the verify pass rejects more.  Each sweep point
+records acceptance rate, tokens per scheduler step and tok/s; the
+headline row is the serve-level lock-step driver, whose greedy tokens
+are asserted bit-identical to the non-speculative baseline.
 """
 import argparse
 import json
 import os
+import statistics
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -30,28 +47,50 @@ import numpy as np
 
 _BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
+# absolute floor for the serve-level speculative/non-speculative decode
+# ratio (the PR's acceptance gate), checked in addition to the committed-
+# baseline-relative tolerance
+_SPEC_SPEEDUP_FLOOR = 1.5
+# the committed sweep point is the conservative no-clip draft; acceptance
+# may not drop more than this (absolute) below the committed value
+_ACCEPTANCE_SLACK = 0.05
+
+
+def _median_rate(row: dict) -> float:
+    """Median decode rate of a bench row (old baselines lack the field)."""
+    return row.get("decode_tok_s_median", row.get("decode_tok_s", 0.0))
+
 
 def check_regression(new: dict, baseline_path: str,
                      tolerance: float = 0.10) -> None:
-    """CI gate: fail if the packed-CIM decode rate regressed >10% vs the
-    committed BENCH_serve.json baseline.
+    """CI gate: fail if a serving hot path regressed vs the committed
+    BENCH_serve.json baseline.
 
-    The gate compares the packed/fp RATIO, not raw tok/s: CI machines are
-    not the machine the baseline was committed on, and absolute tok/s
-    comparisons across hosts would gate on hardware, not code.  The ratio
-    cancels host speed (fp runs in the same process on the same box) and
-    still catches exactly what matters -- the CIM hot path losing ground
-    relative to the native matmul path.
+    All gates compare RATIOS, not raw tok/s: CI machines are not the
+    machine the baseline was committed on, and absolute tok/s comparisons
+    across hosts would gate on hardware, not code.  Ratios cancel host
+    speed (both sides run in the same process on the same box) and still
+    catch exactly what matters -- one path losing ground relative to
+    another.  Three gates:
+
+      packed/fp decode ratio   >= (1 - tolerance) * committed ratio
+      speculative speedup      >= max(_SPEC_SPEEDUP_FLOOR,
+                                      (1 - tolerance) * committed)
+      acceptance rate          >= committed - _ACCEPTANCE_SLACK on the
+                                 conservative sweep point (acceptance is
+                                 a pure function of the plan cascade, not
+                                 host speed, so it gets an absolute gate)
     """
     try:
         with open(baseline_path) as f:
             base = json.load(f)
-        base_ratio = (base["cim_packed"]["decode_tok_s"]
-                      / base["fp"]["decode_tok_s"])
+        base_ratio = (_median_rate(base["cim_packed"])
+                      / _median_rate(base["fp"]))
     except (OSError, KeyError, ValueError, ZeroDivisionError):
         print("# no usable baseline -- regression gate skipped")
         return
-    new_ratio = new["cim_packed"]["decode_tok_s"] / new["fp"]["decode_tok_s"]
+    new_ratio = (_median_rate(new["cim_packed"])
+                 / _median_rate(new["fp"]))
     print(f"# regression gate: packed/fp decode ratio {new_ratio:.3f} "
           f"(baseline {base_ratio:.3f}, tolerance -{tolerance:.0%})")
     if new_ratio < (1.0 - tolerance) * base_ratio:
@@ -60,14 +99,42 @@ def check_regression(new: dict, baseline_path: str,
             f"is >{tolerance:.0%} below the committed baseline "
             f"{base_ratio:.3f} ({baseline_path})")
 
+    spec = new.get("speculative", {})
+    base_spec = base.get("speculative", {})
+    speedup = spec.get("serve_level", {}).get("decode_speedup_speculative")
+    if speedup is not None:
+        floor = _SPEC_SPEEDUP_FLOOR
+        committed = base_spec.get("serve_level", {}).get(
+            "decode_speedup_speculative")
+        if committed:
+            floor = max(floor, (1.0 - tolerance) * committed)
+        print(f"# regression gate: speculative decode speedup "
+              f"{speedup:.2f}x (floor {floor:.2f}x)")
+        if speedup < floor:
+            raise SystemExit(
+                f"speculative decode speedup {speedup:.2f}x fell below the "
+                f"floor {floor:.2f}x (absolute {_SPEC_SPEEDUP_FLOOR}x / "
+                f"committed-relative)")
+        acc = spec.get("sweep", [{}])[0].get("acceptance_rate")
+        base_acc = base_spec.get("sweep", [{}])[0].get("acceptance_rate")
+        if acc is not None and base_acc is not None:
+            print(f"# regression gate: conservative-draft acceptance "
+                  f"{acc:.3f} (committed {base_acc:.3f}, "
+                  f"slack {_ACCEPTANCE_SLACK})")
+            if acc < base_acc - _ACCEPTANCE_SLACK:
+                raise SystemExit(
+                    f"draft acceptance on the conservative sweep point "
+                    f"dropped to {acc:.3f} (committed {base_acc:.3f}): the "
+                    f"plan cascade got lossier without a plan change")
+
 
 def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
-        prompt_len: int = 16, gen: int = 48, repeats: int = 2,
-        path: str = _BENCH_JSON, gate: bool = False) -> dict:
-    from repro.launch.serve import serve, serve_continuous
+        prompt_len: int = 16, gen: int = 48, repeats: int = 3,
+        draft_k: int = 8, path: str = _BENCH_JSON, gate: bool = False) -> dict:
+    from repro.launch.serve import serve, serve_continuous, serve_speculative
 
-    def best(cim: bool, pack: bool, fuse: bool = True):
-        """Best-of-repeats steady decode rate (robust to scheduler noise)."""
+    def measure(cim: bool, pack: bool, fuse: bool = True):
+        """Median-of-repeats decode rate; tokens asserted deterministic."""
         runs = [serve(arch, smoke=smoke, batch=batch, prompt_len=prompt_len,
                       gen=gen, cim=cim, pack=pack, fuse=fuse,
                       return_stats=True)
@@ -75,42 +142,104 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         toks = runs[0][0]
         for t, _ in runs[1:]:
             assert (t == toks).all(), "greedy serving must be deterministic"
-        return toks, max((s for _, s in runs), key=lambda s: s["decode_tok_s"])
+        rates = sorted(s["decode_tok_s"] for _, s in runs)
+        stats = max((s for _, s in runs), key=lambda s: s["decode_tok_s"])
+        stats = dict(stats, decode_tok_s_median=statistics.median(rates),
+                     decode_tok_s_runs=rates)
+        return toks, stats
 
-    _, fp = best(cim=False, pack=False)
-    tok_u, unpacked = best(cim=True, pack=False, fuse=False)
-    tok_p, packed = best(cim=True, pack=True)
+    _, fp = measure(cim=False, pack=False)
+    tok_u, unpacked = measure(cim=True, pack=False, fuse=False)
+    tok_p, packed = measure(cim=True, pack=True)
     assert (tok_u == tok_p).all(), \
         "packed+fused CIM serving diverged from the unpacked unfused path"
     # fusion A/B on the same packed weights: tokens must also be identical
-    tok_nf, packed_unfused = best(cim=True, pack=True, fuse=False)
+    tok_nf, packed_unfused = measure(cim=True, pack=True, fuse=False)
     assert (tok_nf == tok_p).all(), \
         "fused serving changed tokens vs the unfused packed path"
 
-    # decode_speedup_packed_vs_unpacked keeps its historical meaning
-    # (packing ALONE, both sides unfused); fusion and the total vs the
-    # pre-refactor baseline are separate fields
-    pack_speedup = (packed_unfused["decode_tok_s"]
-                    / unpacked["decode_tok_s"])
-    fusion_speedup = (packed["decode_tok_s"]
-                      / packed_unfused["decode_tok_s"])
-    total_speedup = packed["decode_tok_s"] / unpacked["decode_tok_s"]
+    # all ratios from the per-variant medians (single draws at smoke scale
+    # are dominated by host scheduler noise, not the code under test)
+    pack_speedup = (packed_unfused["decode_tok_s_median"]
+                    / unpacked["decode_tok_s_median"])
+    fusion_speedup = (packed["decode_tok_s_median"]
+                      / packed_unfused["decode_tok_s_median"])
+    total_speedup = (packed["decode_tok_s_median"]
+                     / unpacked["decode_tok_s_median"])
 
     # continuous batching vs lock-step on a mixed-length queue; token
-    # parity with the lock-step plan is asserted inside serve_continuous
+    # parity with the lock-step plan is asserted inside serve_continuous.
+    # The packed_unfused row is the fusion A/B at the continuous-batching
+    # level (same scheduler, cfg.cim_fuse off).
     cb = {}
-    for mode, cim in (("fp", False), ("cim_packed", True)):
-        _, st = serve_continuous(arch, smoke=smoke, slots=batch,
-                                 prompt_len=prompt_len, n_requests=4 * batch,
-                                 stop_lengths=(4, 16, 8, 12), cim=cim,
-                                 pack=cim, repeats=max(repeats, 3))
+    cb_tokens = {}
+    cb_repeats = max(repeats, 3)
+    for mode, cim, fuse in (("fp", False, True), ("cim_packed", True, True),
+                            ("cim_packed_unfused", True, False)):
+        toks, st = serve_continuous(arch, smoke=smoke, slots=batch,
+                                    prompt_len=prompt_len,
+                                    n_requests=4 * batch,
+                                    stop_lengths=(4, 16, 8, 12), cim=cim,
+                                    pack=cim, fuse=fuse, repeats=cb_repeats)
+        cb_tokens[mode] = toks
         cb[mode] = dict(continuous=st["continuous"], lockstep=st["lockstep"],
+                        tok_s_median=st["tok_s_median"],
+                        lockstep_tok_s_median=st["lockstep_tok_s_median"],
                         tokens_match_lockstep=st["tokens_match_lockstep"],
                         speedup_vs_lockstep=st["speedup_vs_lockstep"])
+    for rid, want in cb_tokens["cim_packed"].items():
+        np.testing.assert_array_equal(
+            cb_tokens["cim_packed_unfused"][rid], want,
+            err_msg=f"request {rid}: fusion changed continuous-batching "
+                    "tokens")
+    cb["fusion_speedup"] = round(
+        cb["cim_packed"]["tok_s_median"]
+        / cb["cim_packed_unfused"]["tok_s_median"], 2)
+    cb["fused_tokens_bit_identical"] = True
+
+    # --- plan-cascade speculative decoding -------------------------------
+    # Headline: the serve-level lock-step driver (one AOT dispatch per
+    # draft/verify round); greedy tokens asserted bit-identical to the
+    # non-speculative baseline inside serve_speculative.  Median-of-repeats
+    # on both sides of the ratio.
+    spec_runs = [serve_speculative(arch, smoke=smoke, batch=batch,
+                                   prompt_len=prompt_len, gen=gen,
+                                   draft_k=draft_k, return_stats=True)[1]
+                 for _ in range(repeats)]
+    spec_med = statistics.median(s["decode_tok_s"] for s in spec_runs)
+    base_med = statistics.median(s["baseline_decode_tok_s"]
+                                 for s in spec_runs)
+    serve_level = dict(
+        spec_runs[0], decode_tok_s_median=round(spec_med, 2),
+        baseline_decode_tok_s_median=round(base_med, 2),
+        decode_speedup_speculative=round(spec_med / base_med, 2))
+
+    # Acceptance-vs-D/A-split sweep through the continuous-batching
+    # scheduler: the draft plan's SAR width is the aggressiveness axis
+    # (None = per-entry no-clip width; narrower widths clip large analog
+    # accumulates, so verify rejects more and tokens/step shrinks).
+    nonspec_med = cb["cim_packed"]["tok_s_median"]
+    sweep = []
+    for bits in (None, 7, 6, 5):
+        _, st = serve_continuous(arch, smoke=smoke, slots=batch,
+                                 prompt_len=prompt_len,
+                                 n_requests=4 * batch,
+                                 stop_lengths=(4, 16, 8, 12), cim=True,
+                                 pack=True, draft_k=draft_k,
+                                 draft_adc_bits=bits, repeats=cb_repeats)
+        cont = st["continuous"]
+        sweep.append(dict(
+            draft_plan=st["draft_plan"], draft_k=draft_k,
+            acceptance_rate=cont["acceptance_rate"],
+            tokens_per_step=cont["tokens_per_step"],
+            tok_s_median=st["tok_s_median"],
+            speedup_vs_nonspec_cb=round(st["tok_s_median"] / nonspec_med, 2),
+            tokens_match_lockstep=st["tokens_match_lockstep"]))
 
     result = dict(
         config=dict(arch=arch, smoke=smoke, batch=batch,
-                    prompt_len=prompt_len, gen=gen, repeats=repeats),
+                    prompt_len=prompt_len, gen=gen, repeats=repeats,
+                    draft_k=draft_k),
         fp=fp,
         cim_unpacked=unpacked,          # pre-refactor baseline dataflow
         cim_packed_unfused=packed_unfused,   # packing alone, no fusion
@@ -121,23 +250,37 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         decode_speedup_fusion=round(fusion_speedup, 2),
         decode_speedup_vs_prerefactor=round(total_speedup, 2),
         continuous_batching=cb,
+        speculative=dict(serve_level=serve_level, sweep=sweep),
     )
     if gate:
         check_regression(result, path)
     with open(path, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
-    print(f"# decode tok/s: fp {fp['decode_tok_s']}, "
-          f"cim unpacked {unpacked['decode_tok_s']}, "
-          f"cim packed {packed['decode_tok_s']} "
+    print(f"# decode tok/s (median of {repeats}): "
+          f"fp {fp['decode_tok_s_median']:.1f}, "
+          f"cim unpacked {unpacked['decode_tok_s_median']:.1f}, "
+          f"cim packed {packed['decode_tok_s_median']:.1f} "
           f"({total_speedup:.2f}x total: {pack_speedup:.2f}x packing, "
           f"{fusion_speedup:.2f}x fusion; pack cost {packed['pack_s']}s)")
-    for mode, row in cb.items():
+    for mode in ("fp", "cim_packed", "cim_packed_unfused"):
+        row = cb[mode]
         print(f"# continuous batching ({mode}): "
-              f"{row['continuous']['tok_s']} tok/s at "
+              f"{row['tok_s_median']} tok/s (median) at "
               f"{row['continuous']['occupancy']:.0%} occupancy vs lock-step "
-              f"{row['lockstep']['tok_s']} ({row['speedup_vs_lockstep']}x, "
-              f"tokens identical)")
+              f"{row['lockstep_tok_s_median']} ({row['speedup_vs_lockstep']}x,"
+              f" tokens identical)")
+    print(f"# cb fusion speedup (median): {cb['fusion_speedup']}x")
+    print(f"# speculative (serve-level, k={draft_k}): "
+          f"{serve_level['decode_tok_s_median']} tok/s vs baseline "
+          f"{serve_level['baseline_decode_tok_s_median']} "
+          f"({serve_level['decode_speedup_speculative']}x, acceptance "
+          f"{serve_level['acceptance_rate']:.0%}, tokens identical)")
+    for pt in sweep:
+        print(f"# speculative sweep {pt['draft_plan']}: acceptance "
+              f"{pt['acceptance_rate']:.2f}, {pt['tokens_per_step']} tok/step,"
+              f" {pt['tok_s_median']} tok/s "
+              f"({pt['speedup_vs_nonspec_cb']}x vs non-spec cb)")
     print(f"# wrote {path}")
     return result
 
@@ -150,13 +293,18 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=48)
-    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--draft-k", type=int, default=8,
+                    help="draft block length for the speculative rows")
     ap.add_argument("--check-regression", dest="gate", action="store_true",
                     help="fail if packed decode regressed >10%% vs the "
-                         "committed BENCH_serve.json (packed/fp ratio)")
+                         "committed BENCH_serve.json (packed/fp ratio), the "
+                         "speculative speedup fell below its floor, or "
+                         "draft acceptance dropped on the committed sweep "
+                         "point")
     args = ap.parse_args()
     run(args.arch, args.smoke, args.batch, args.prompt_len, args.gen,
-        args.repeats, gate=args.gate)
+        args.repeats, args.draft_k, gate=args.gate)
 
 
 if __name__ == "__main__":

@@ -98,3 +98,22 @@ autotune.save()
 tokens = serve("minicpm-2b", batch=2, prompt_len=16, gen=8, plan=res.plan,
                pack=True, fuse=True)
 print("served tokens through the planned model:", tokens[0])
+
+# --- the D/A split as a LATENCY knob: speculative decoding ----------------
+# Derive the plan's all-analog shadow (same n_mag_bits/acc_len, no DCIM
+# planes -- pack-compatible, so it serves the SAME packed weights), draft
+# k tokens per round under it, verify all k+1 positions in one wide
+# skinny-M forward under the deployed plan, accept/resample.  Greedy
+# output is bit-identical to the non-speculative serve above (asserted
+# inside serve_speculative); acceptance depends on how far the draft SAR
+# is narrowed below its no-clip width.
+from repro.launch.serve import serve_speculative
+
+draft = P.derive_draft_plan(res.plan)     # conservative: no-clip widths
+print("\ndraft plan (default entry):", draft.default.label)
+spec_tokens, spec = serve_speculative(
+    "minicpm-2b", batch=2, prompt_len=16, gen=8, draft_k=4, plan=res.plan,
+    draft_plan=draft, return_stats=True)
+print(f"speculative decode: {spec['decode_speedup_speculative']}x vs "
+      f"non-speculative, acceptance {spec['acceptance_rate']:.0%}, "
+      "tokens identical")

@@ -31,6 +31,7 @@ from .engine import (  # noqa: F401
     PackedComplexCimWeights,
     pack_cim_weights,
     pack_complex_cim_weights,
+    pack_compatible,
     pack_quantized_cim_weights,
     packed_cim_matmul,
     packed_cim_matmul_int,

@@ -257,6 +257,30 @@ def _prepacked_kernel_supported(cfg: CCIMConfig) -> bool:
             and cfg.acc_len in (8, 16, 32, 64))
 
 
+def pack_compatible(packed_cfg: CCIMConfig, cfg: CCIMConfig) -> bool:
+    """True when weights packed under ``packed_cfg`` can be SERVED under
+    ``cfg`` without repacking.
+
+    Besides trivial equality, the one relaxation is an *analog subset*: a
+    serving config with NO DCIM products whose quantization
+    (``n_mag_bits``) and chunk geometry (``acc_len``) match the pack.
+    Pack-time layout depends only on those two knobs plus the plane fold,
+    and a zero-product serving config never reads the folded planes (the
+    DCIM dot is skipped entirely) while ``adc_bits`` only enters the
+    runtime conversion epilogue.  This is what lets a speculative DRAFT
+    plan (all-analog, cheap conversions) serve the SAME packed arrays its
+    hybrid VERIFY plan uses -- one pack, two speed/accuracy operating
+    points, the software twin of both splits sharing every bit-cell of
+    the 2D array in silicon.
+    """
+    if packed_cfg == cfg:
+        return True
+    return (cfg.n_dcim_products == 0
+            and dataclasses.replace(
+                cfg, n_dcim_products=packed_cfg.n_dcim_products,
+                adc_bits=packed_cfg.adc_bits) == packed_cfg)
+
+
 def packed_cim_matmul_int(
     x_q: Array,                       # (M, K) ints in [-127, 127]
     packed: PackedCimWeights,
@@ -280,22 +304,29 @@ def packed_cim_matmul_int(
     """
     M, K = x_q.shape
     assert K == packed.k_dim, (K, packed.k_dim)
-    if packed.cfg != cfg:
+    if not pack_compatible(packed.cfg, cfg):
         raise ValueError(
             "PackedCimWeights were packed for a different CCIMConfig than "
             "they are being served with (plane fold and chunk layout are "
             f"config-specific): packed for {packed.cfg}, serving {cfg}. "
-            "Re-pack the weights for the serving config.")
+            "Re-pack the weights for the serving config, or serve an "
+            "all-analog subset (n_dcim_products=0, same n_mag_bits and "
+            "acc_len), which never touches the folded planes.")
     if (fidelity == "fast" and noise_key is None
             and _prepacked_kernel_supported(cfg)):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         if use_pallas:
             from ..kernels.ccim_matmul.ops import ccim_matmul_int_prepacked
+            x_bits = tuple(_dcim_by_j(cfg))
+            # analog-subset serving of a hybrid pack: no activation bit
+            # planes, so hand the kernel a zero-plane weight operand
+            planes = (packed.pallas_planes if packed.cfg == cfg
+                      else packed.pallas_planes[:len(x_bits)])
             return ccim_matmul_int_prepacked(
-                x_q, packed.pallas_w, packed.pallas_planes,
+                x_q, packed.pallas_w, planes,
                 k_dim=packed.k_dim, n_dim=packed.n_dim,
-                acc_len=cfg.acc_len, x_bits=tuple(_dcim_by_j(cfg)),
+                acc_len=cfg.acc_len, x_bits=x_bits,
                 dcim_lsb=cfg.dcim_lsb, adc_bits=cfg.adc_bits,
                 use_pallas=True)
     if fidelity == "fast":

@@ -28,6 +28,7 @@ import functools
 import json
 import os
 import time
+import warnings
 from typing import Dict, Iterable, Optional, Tuple
 
 _CACHE_VERSION = 1
@@ -51,10 +52,23 @@ def _entries() -> Dict[str, dict]:
         try:
             with open(path) as f:
                 data = json.load(f)
-            if data.get("version") == _CACHE_VERSION:
-                entries = data.get("entries", {})
-        except (OSError, ValueError):
-            pass
+        except FileNotFoundError:
+            data = None
+        except (OSError, ValueError) as e:
+            # Corrupt / partially-written cache: blocks are a perf knob,
+            # never a correctness one, so warn once and run on heuristics.
+            warnings.warn(f"ignoring unreadable tuning cache {path}: {e}")
+            data = None
+        if data is not None:
+            if (isinstance(data, dict)
+                    and isinstance(data.get("entries"), dict)):
+                if data.get("version") == _CACHE_VERSION:
+                    entries = {k: v for k, v in data["entries"].items()
+                               if isinstance(v, dict)}
+            else:
+                warnings.warn(
+                    f"ignoring malformed tuning cache {path}: expected "
+                    "{'version': ..., 'entries': {...}}")
         _state["path"], _state["entries"] = path, entries
     return _state["entries"]  # type: ignore[return-value]
 

@@ -92,13 +92,28 @@ class FinishedRequest:
 class ServeReport:
     finished: List[FinishedRequest]
     wall_s: float
-    n_steps: int                  # pooled decode steps
+    n_steps: int                  # pooled decode steps (rounds, if spec)
     n_admits: int
     slots: int
+    n_drafted: int = 0            # draft tokens proposed (speculative mode)
+    n_accepted: int = 0           # draft tokens accepted by verify
 
     @property
     def total_tokens(self) -> int:
         return sum(len(f.tokens) for f in self.finished)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify pass accepted."""
+        return (self.n_accepted / self.n_drafted if self.n_drafted
+                else float("nan"))
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Emitted tokens per pooled step: ~1*occupancy lock-free decode,
+        up to (draft_k+1)*slots when every draft block is accepted."""
+        return (self.total_tokens / self.n_steps if self.n_steps
+                else float("nan"))
 
     @property
     def tok_s(self) -> float:
@@ -119,14 +134,20 @@ class ServeReport:
         return {"p50_s": pick(0.50), "p95_s": pick(0.95)}
 
     def summary(self) -> Dict:
-        return dict(total_tokens=self.total_tokens,
-                    wall_s=round(self.wall_s, 4),
-                    tok_s=round(self.tok_s, 2),
-                    occupancy=round(self.occupancy, 4),
-                    n_steps=self.n_steps, n_admits=self.n_admits,
-                    slots=self.slots,
-                    **{k: round(v, 4) for k, v in
-                       self.latency_percentiles().items()})
+        out = dict(total_tokens=self.total_tokens,
+                   wall_s=round(self.wall_s, 4),
+                   tok_s=round(self.tok_s, 2),
+                   occupancy=round(self.occupancy, 4),
+                   n_steps=self.n_steps, n_admits=self.n_admits,
+                   slots=self.slots,
+                   **{k: round(v, 4) for k, v in
+                      self.latency_percentiles().items()})
+        if self.n_drafted:
+            out.update(n_drafted=self.n_drafted,
+                       n_accepted=self.n_accepted,
+                       acceptance_rate=round(self.acceptance_rate, 4),
+                       tokens_per_step=round(self.tokens_per_step, 4))
+        return out
 
     def tokens_by_rid(self) -> Dict[int, np.ndarray]:
         return {f.rid: f.tokens for f in self.finished}
@@ -153,20 +174,46 @@ class ContinuousBatchingScheduler:
     estimate -- admit iterations cost more than step iterations -- but the
     loop never leaves the device, so there is no per-event host timestamp
     to read without paying the sync the design removes.
+
+    ``draft_k > 0`` turns on plan-cascade speculative decoding: each step
+    branch becomes one atomic draft-K/verify/accept ROUND (see
+    ``spec_step``), drafting under ``draft_plan`` (an all-analog shadow of
+    the serving plan -- ``plan.derive_draft_plan`` -- served from the SAME
+    packed weights) and verifying under the deployed config.  Rounds are
+    atomic per loop iteration, so harvest/admit still interleave between
+    rounds and the determinism contract is unchanged: a request's tokens
+    depend only on (params, prompt, rid); greedy output is bit-identical
+    to the non-speculative scheduler, temperature sampling is
+    distribution-identical (rejection sampling) and stays pool-vs-solo
+    bit-identical at EQUAL draft_k.  Restricted to positional-KV families
+    (attention); SSM/conv recurrences cannot roll back a rejected block.
     """
 
     def __init__(self, params, cfg: ModelConfig, slots: int, prompt_len: int,
                  max_new_cap: int, temperature: float = 0.0, seed: int = 0,
-                 pad_token: int = 0):
+                 pad_token: int = 0, draft_k: int = 0, draft_plan=None):
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "scheduler is text-only for now (no per-request frontends)")
+        if draft_k and cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "speculative decoding needs positional KV rollback; the "
+                f"{cfg.family!r} family carries recurrent SSM/conv state "
+                "that a rejected draft block cannot roll back")
+        if draft_k < 0 or draft_k > 31:
+            raise ValueError(f"draft_k {draft_k} outside [0, 31] (k+1 must "
+                             "stay on the skinny-M verify path)")
         self.cfg, self.slots = cfg, slots
         self.prompt_len, self.cap = prompt_len, max_new_cap
         self.temperature, self.pad_token = temperature, pad_token
         self._base_key = sampling_key(seed)
-        self.max_seq = prompt_len + max_new_cap
+        # speculative rounds write draft/verify KV rows up to pos + draft_k
+        # before rollback, so the cache keeps that much extra headroom
+        self.max_seq = prompt_len + max_new_cap + draft_k
         self._params = params
+        self.draft_k = draft_k
+        self.draft_cfg = (dataclasses.replace(cfg, cim_plan=draft_plan)
+                          if draft_plan is not None else cfg)
         self._loops: Dict[int, object] = {}    # queue length -> executable
 
         def sample(logits, keys):
@@ -217,7 +264,123 @@ class ContinuousBatchingScheduler:
                         n_gen=n_gen, keys=keys, live=live & ~finished,
                         pending=st["pending"] | finished)
 
+        def spec_step(params, st):
+            """One speculative ROUND as a single pooled step: draft K
+            tokens under the draft-plan config (same packed weights), roll
+            the per-slot positions back, verify all K+1 positions in ONE
+            wide forward (M = slots*(K+1) stays on the skinny-M prepacked
+            kernels), then accept the longest agreeing prefix plus a
+            correction/bonus token.  Emits a VARIABLE 1..K+1 tokens per
+            slot; the whole round compiles into one loop iteration, so
+            per-step dispatch overhead is amortized over every accepted
+            token.  Returns (state, n_drafted, n_accepted).
+
+            Rollback is positional: draft and verify writes land at rows
+            >= the committed ``cache["pos"]``, which the attention
+            validity horizon masks until pos is advanced past them -- so
+            "rolling back" a rejected suffix is just not advancing pos
+            over it, and the next round's writes overwrite those rows.
+            """
+            K = self.draft_k
+            live = st["live"]
+            pos0 = st["cache"]["pos"]
+            cache, keys, last = st["cache"], st["keys"], st["last_tok"]
+            d_toks, d_logits = [], []
+            for _ in range(K):
+                logits, cache = lm.decode_step(params, self.draft_cfg, last,
+                                               cache, live=live)
+                splits = jax.vmap(jax.random.split)(keys)
+                dtok = sample(logits[:, -1], splits[:, 1])
+                dtok = jnp.where(live, dtok, jnp.int32(self.pad_token))
+                keys = jnp.where(live[:, None], splits[:, 0], keys)
+                d_toks.append(dtok)
+                if temperature > 0:
+                    d_logits.append(logits[:, -1])
+                last = dtok[:, None]
+            drafts = jnp.stack(d_toks, axis=1)                  # (B, K)
+            vtoks = jnp.concatenate([st["last_tok"], drafts], axis=1)
+            cache = dict(cache, pos=pos0)   # rollback before verify
+            vlogits, cache = lm.verify_step(params, cfg, vtoks, cache)
+
+            # verify position i gives the distribution of the token AFTER
+            # prefix [last, d_1..d_i]; cand pads drafts to K+1 columns so
+            # the correction token can be placed at column n_acc
+            cand = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)
+            if temperature <= 0:
+                v_arg = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
+                match = (v_arg[:, :K] == drafts).astype(jnp.int32)
+                n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                corr = v_arg              # correction at ANY column is its argmax
+            else:
+                # standard rejection sampling: accept d_i with probability
+                # min(1, p_verify(d_i)/p_draft(d_i)); on first rejection,
+                # resample from the normalized residual max(p_v - p_d, 0).
+                # When all K drafts are accepted the padded zero row makes
+                # the residual collapse to p_v[:, K] -- the bonus draw.
+                dlg = jnp.stack(d_logits, axis=1)               # (B, K, V)
+                p_d = jax.nn.softmax(dlg / temperature, axis=-1)
+                p_v = jax.nn.softmax(vlogits / temperature, axis=-1)
+                pd_tok = jnp.take_along_axis(
+                    p_d, drafts[..., None], -1)[..., 0]
+                pv_tok = jnp.take_along_axis(
+                    p_v[:, :K], drafts[..., None], -1)[..., 0]
+                splits = jax.vmap(jax.random.split)(keys)
+                u = jax.vmap(lambda k: jax.random.uniform(k, (K,)))(
+                    splits[:, 1])
+                keys = jnp.where(live[:, None], splits[:, 0], keys)
+                acc = (u * pd_tok < pv_tok).astype(jnp.int32)
+                n_acc = jnp.sum(jnp.cumprod(acc, axis=1), axis=1)
+                pv_n = jnp.take_along_axis(
+                    p_v, n_acc[:, None, None], axis=1)[:, 0]
+                pd_ext = jnp.concatenate(
+                    [p_d, jnp.zeros_like(p_d[:, :1])], axis=1)
+                pd_n = jnp.take_along_axis(
+                    pd_ext, n_acc[:, None, None], axis=1)[:, 0]
+                res = jnp.maximum(pv_n - pd_n, 0.0)
+                tot = jnp.sum(res, axis=-1, keepdims=True)
+                res = jnp.where(tot > 0, res / jnp.maximum(tot, 1e-38),
+                                pv_n)
+                splits = jax.vmap(jax.random.split)(keys)
+                corr = jax.vmap(lambda r, k: jax.random.categorical(
+                    k, jnp.log(jnp.maximum(r, 1e-38))))(
+                    res, splits[:, 1]).astype(jnp.int32)[:, None]
+                keys = jnp.where(live[:, None], splits[:, 0], keys)
+
+            cols = jnp.arange(K + 1, dtype=jnp.int32)[None, :]
+            emitted = jnp.where(cols == n_acc[:, None], corr, cand)
+            # clamp by the per-request budget, then truncate at the first
+            # stop token INSIDE the emitted block (stop included)
+            allowed = jnp.maximum(st["max_new"] - st["n_gen"], 0)
+            n_emit = jnp.minimum(n_acc + 1, allowed)
+            is_stop = (emitted == st["stop"][:, None]) & (cols < n_emit[:, None])
+            has_stop = jnp.any(is_stop, axis=1)
+            n_emit = jnp.where(has_stop, jnp.argmax(is_stop, axis=1) + 1,
+                               n_emit)
+            n_emit = jnp.where(live, n_emit, 0)
+
+            ar = jnp.arange(self.slots)
+            out = st["out"]
+            for j in range(K + 1):
+                idx = jnp.minimum(st["n_gen"] + j, self.cap - 1)
+                cur = out[ar, idx]
+                out = out.at[ar, idx].set(
+                    jnp.where(j < n_emit, emitted[:, j], cur))
+            n_gen = st["n_gen"] + n_emit
+            finished = live & (has_stop | (n_gen >= st["max_new"]))
+            new_last = jnp.take_along_axis(
+                emitted, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+            new_last = jnp.where(n_emit > 0, new_last, st["last_tok"][:, 0])
+            # committed rows [0, pos0 + n_emit): the old frontier token
+            # plus every emitted token except the new frontier
+            cache = dict(cache, pos=pos0 + n_emit)
+            st = dict(st, cache=cache, last_tok=new_last[:, None], out=out,
+                      n_gen=n_gen, keys=keys, live=live & ~finished,
+                      pending=st["pending"] | finished)
+            return (st, jnp.sum(jnp.where(live, K, 0)).astype(jnp.int32),
+                    jnp.sum(jnp.where(live, n_acc, 0)).astype(jnp.int32))
+
         self._arm_slot, self._step_fn = arm_slot, step
+        self._spec_step = spec_step
         self._lockstep_exes = None
 
     def _lockstep_executables(self):
@@ -274,6 +437,11 @@ class ContinuousBatchingScheduler:
                             n_admits=c["n_admits"] + 1)
 
             def step(c):
+                if self.draft_k:
+                    st, drafted, accepted = self._spec_step(params, c["st"])
+                    return dict(c, st=st, n_steps=c["n_steps"] + 1,
+                                n_drafted=c["n_drafted"] + drafted,
+                                n_accepted=c["n_accepted"] + accepted)
                 return dict(c, st=self._step_fn(params, c["st"]),
                             n_steps=c["n_steps"] + 1)
 
@@ -291,7 +459,7 @@ class ContinuousBatchingScheduler:
 
             carry = dict(
                 st=st, q_head=_i32(0), n_iter=_i32(0), n_steps=_i32(0),
-                n_admits=_i32(0),
+                n_admits=_i32(0), n_drafted=_i32(0), n_accepted=_i32(0),
                 res_out=jnp.full((n_queue, cap), self.pad_token, jnp.int32),
                 res_n=jnp.zeros((n_queue,), jnp.int32),
                 res_iter=jnp.zeros((n_queue,), jnp.int32),
@@ -299,7 +467,8 @@ class ContinuousBatchingScheduler:
             c = jax.lax.while_loop(cond, body, carry)
             return dict(res_out=c["res_out"], res_n=c["res_n"],
                         res_iter=c["res_iter"], n_iter=c["n_iter"],
-                        n_steps=c["n_steps"], n_admits=c["n_admits"])
+                        n_steps=c["n_steps"], n_admits=c["n_admits"],
+                        n_drafted=c["n_drafted"], n_accepted=c["n_accepted"])
 
         # no donation: the loop's outputs are only the result buffers, so
         # the input state can't alias anything (XLA would warn and ignore)
@@ -368,7 +537,9 @@ class ContinuousBatchingScheduler:
             for i, r in enumerate(requests)]
         return ServeReport(finished=done, wall_s=wall,
                            n_steps=int(res["n_steps"]),
-                           n_admits=int(res["n_admits"]), slots=self.slots)
+                           n_admits=int(res["n_admits"]), slots=self.slots,
+                           n_drafted=int(res["n_drafted"]),
+                           n_accepted=int(res["n_accepted"]))
 
     def run_lockstep(self, requests: Sequence[Request]) -> ServeReport:
         """Lock-step baseline through the SAME per-slot machinery: waves

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import statistics
 import time
 
 import jax
@@ -172,12 +173,215 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     return gen_tokens
 
 
+def serve_speculative(arch: str, smoke: bool = True, batch: int = 2,
+                      prompt_len: int = 16, gen: int = 48, draft_k: int = 8,
+                      draft_adc_bits=None, draft_plan=None,
+                      temperature: float = 0.0, seed: int = 0, plan=None,
+                      cim: bool = True, pack: bool = True, fuse: bool = True,
+                      compare_baseline: bool = True,
+                      return_stats: bool = False):
+    """Plan-cascade speculative lock-step driver: ONE AOT dispatch per
+    draft/verify ROUND instead of one per token.
+
+    The draft plan (``plan.draft_plan_for_model``: the all-analog shadow
+    of the serving plan, or ``draft_plan`` verbatim) serves from the SAME
+    packed weights as the verify plan -- no second pack, no recompiles.
+    Each round drafts ``draft_k`` tokens under the draft config, rolls the
+    cache positions back, verifies all k+1 positions in one wide skinny-M
+    forward under the deployed config, and accepts the longest agreeing
+    prefix plus a correction token.  Because the whole round is one
+    executable, the per-dispatch overhead that dominates ``serve``'s
+    decode loop at smoke scale is amortized over every accepted token --
+    that, plus the analog draft skipping the DCIM plane dot, is the
+    speedup.
+
+    Greedy output is bit-identical to ``serve`` (asserted when
+    ``compare_baseline``); temperature>0 uses standard rejection sampling,
+    so it matches the verify model in distribution (not bitwise -- the
+    baseline consumes its key stream once per token, this driver once per
+    draft/uniform/resample event).
+
+    Returns tokens (batch, gen); with ``return_stats=True``, (tokens,
+    stats) including acceptance_rate, tokens_per_round and (when
+    ``compare_baseline``) ``decode_speedup_speculative``.
+    """
+    cfg = get_config(arch, smoke=smoke)
+    if plan is not None:
+        cim = True
+        cfg = dataclasses.replace(cfg, cim_plan=plan)
+    if not fuse:
+        cfg = dataclasses.replace(cfg, cim_fuse=False)
+    if cim:
+        cfg = dataclasses.replace(cfg, cim_mode=True)
+    pack = pack and cim
+    if draft_plan is None:
+        from ..plan import draft_plan_for_model
+        draft_plan = draft_plan_for_model(cfg, draft_adc_bits)
+    dcfg = dataclasses.replace(cfg, cim_plan=draft_plan) if cim else cfg
+    K = draft_k
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                    global_batch=batch, seed=seed, d_model=cfg.d_model)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    tokens = jnp.asarray(batch_at(dc, 0)["tokens"])
+    t_pack = 0.0
+    if pack:
+        t0 = time.time()
+        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
+        t_pack = time.time() - t0
+
+    # live rows can overshoot the target by up to one block per round and
+    # verify probes K rows past the frontier -- size the cache for both
+    cache = lm.init_cache(cfg, batch, prompt_len + gen + 2 * K + 1)
+
+    def round_fn(params, last0, cache, key, live):
+        pos0 = cache["pos"]
+        last, d_toks, d_logits = last0, [], []
+        for _ in range(K):
+            logits, cache = lm.decode_step(params, dcfg, last, cache,
+                                           live=live)
+            key, sub = jax.random.split(key)
+            if temperature > 0:
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / temperature).astype(jnp.int32)
+                d_logits.append(logits[:, -1])
+            else:
+                tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            d_toks.append(tok)
+            last = tok[:, None]
+        drafts = jnp.stack(d_toks, axis=1)                  # (B, K)
+        vtoks = jnp.concatenate([last0, drafts], axis=1)    # (B, K+1)
+        cache = dict(cache, pos=pos0)                       # rollback
+        vlogits, cache = lm.verify_step(params, cfg, vtoks, cache)
+        cand = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)
+        if temperature <= 0:
+            v_arg = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
+            match = (v_arg[:, :K] == drafts).astype(jnp.int32)
+            n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            corr = v_arg
+        else:
+            dlg = jnp.stack(d_logits, axis=1)
+            p_d = jax.nn.softmax(dlg / temperature, axis=-1)
+            p_v = jax.nn.softmax(vlogits / temperature, axis=-1)
+            pd_tok = jnp.take_along_axis(p_d, drafts[..., None], -1)[..., 0]
+            pv_tok = jnp.take_along_axis(
+                p_v[:, :K], drafts[..., None], -1)[..., 0]
+            key, sub = jax.random.split(key)
+            u = jax.random.uniform(sub, drafts.shape)
+            acc = (u * pd_tok < pv_tok).astype(jnp.int32)
+            n_acc = jnp.sum(jnp.cumprod(acc, axis=1), axis=1)
+            pv_n = jnp.take_along_axis(p_v, n_acc[:, None, None], 1)[:, 0]
+            pd_ext = jnp.concatenate(
+                [p_d, jnp.zeros_like(p_d[:, :1])], axis=1)
+            pd_n = jnp.take_along_axis(pd_ext, n_acc[:, None, None], 1)[:, 0]
+            res = jnp.maximum(pv_n - pd_n, 0.0)
+            tot = jnp.sum(res, axis=-1, keepdims=True)
+            res = jnp.where(tot > 0, res / jnp.maximum(tot, 1e-38), pv_n)
+            key, sub = jax.random.split(key)
+            corr = jax.random.categorical(
+                sub, jnp.log(jnp.maximum(res, 1e-38)))[:, None].astype(
+                jnp.int32)
+        cols = jnp.arange(K + 1, dtype=jnp.int32)[None, :]
+        emitted = jnp.where(cols == n_acc[:, None], corr, cand)
+        n_emit = jnp.where(live, n_acc + 1, 0)
+        new_last = jnp.where(
+            live[:, None],
+            jnp.take_along_axis(emitted, n_acc[:, None], axis=1), last0)
+        cache = dict(cache, pos=pos0 + n_emit)
+        return emitted, n_emit, new_last, cache, key
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, t, c: lm.prefill(p, cfg, t, c),
+                      donate_argnums=(2,)
+                      ).lower(params, tokens, cache).compile()
+    tok0 = jnp.zeros((batch, 1), jnp.int32)
+    key0 = sampling_key(seed)
+    live0 = jnp.ones((batch,), jnp.bool_)
+    round_exe = jax.jit(round_fn, donate_argnums=(2,)).lower(
+        params, tok0, cache, key0, live0).compile()
+    t_compile = time.time() - t0
+
+    t0 = time.time()
+    logits, cache = prefill(params, tokens, cache)
+    key = key0
+    if temperature > 0:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+    else:
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    tok.block_until_ready()
+    t_prefill = time.time() - t0
+
+    target = gen - 1                      # decode tokens after the first
+    first = np.asarray(tok)[:, 0]
+    rows = [[int(t)] for t in first]
+    counts = np.zeros(batch, np.int64)
+    n_rounds = n_drafted = n_accepted = 0
+    t0 = time.time()
+    while counts.min() < target:
+        live = jnp.asarray(counts < target)
+        emitted, n_emit, tok, cache, key = round_exe(
+            params, tok, cache, key, live)
+        em, ne = np.asarray(emitted), np.asarray(n_emit)
+        for b in range(batch):
+            rows[b].extend(em[b, :ne[b]].tolist())
+        n_drafted += K * int((counts < target).sum())
+        n_accepted += int(np.maximum(ne - 1, 0).sum())
+        counts += ne
+        n_rounds += 1
+    t_decode = time.time() - t0
+    gen_tokens = np.asarray([r[:gen] for r in rows], dtype=np.int64)
+
+    decode_tok_s = (batch * target / t_decode if t_decode > 0
+                    else float("nan"))
+    stats = dict(
+        arch=arch, batch=batch, prompt_len=prompt_len, gen=gen,
+        cim=cim, packed=pack, draft_k=K,
+        draft_plan=draft_plan.summary()["<default>"],
+        compile_s=round(t_compile, 4), pack_s=round(t_pack, 4),
+        prefill_s=round(t_prefill, 4), decode_s=round(t_decode, 4),
+        decode_tok_s=round(decode_tok_s, 2), n_rounds=n_rounds,
+        n_drafted=n_drafted, n_accepted=n_accepted,
+        acceptance_rate=round(n_accepted / n_drafted, 4) if n_drafted
+        else float("nan"),
+        tokens_per_round=round(batch * target / n_rounds, 2) if n_rounds
+        else float("nan"),
+    )
+    print(f"[serve-spec] {arch} (k={K}, draft {stats['draft_plan']}): "
+          f"batch {batch}, gen {gen} | decode {t_decode:.2f}s "
+          f"({decode_tok_s:.1f} tok/s), acceptance "
+          f"{stats['acceptance_rate']:.0%}")
+    if compare_baseline:
+        base_toks, base = serve(arch, smoke=smoke, batch=batch,
+                                prompt_len=prompt_len, gen=gen, cim=cim,
+                                temperature=temperature, seed=seed,
+                                pack=pack, return_stats=True, plan=plan,
+                                fuse=fuse)
+        if temperature <= 0:
+            np.testing.assert_array_equal(
+                gen_tokens, base_toks,
+                err_msg="speculative greedy decode changed tokens vs the "
+                        "non-speculative baseline")
+            stats["tokens_match_baseline"] = True
+        stats["baseline_decode_tok_s"] = base["decode_tok_s"]
+        stats["decode_speedup_speculative"] = round(
+            decode_tok_s / base["decode_tok_s"], 2)
+        print(f"[serve-spec] speedup vs non-speculative: "
+              f"{stats['decode_speedup_speculative']:.2f}x"
+              + (" (tokens identical)" if temperature <= 0 else ""))
+    if return_stats:
+        return gen_tokens, stats
+    return gen_tokens
+
+
 def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                      prompt_len: int = 16, n_requests: int = 8,
                      stop_lengths=(4, 16, 8, 12), cim: bool = False,
                      pack: bool = True, temperature: float = 0.0,
                      seed: int = 0, compare_lockstep: bool = True,
-                     repeats: int = 1, plan=None, fuse: bool = True):
+                     repeats: int = 1, plan=None, fuse: bool = True,
+                     draft_k: int = 0, draft_plan=None, draft_adc_bits=None):
     """Continuous-batching driver: a mixed-length request queue served
     from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
 
@@ -185,11 +389,21 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     same requests also run through the lock-step wave baseline on the SAME
     compiled executables and the per-request tokens are asserted
     bit-identical -- the scheduler may only reorder work, never change it.
-    ``repeats`` reruns both drivers and keeps each one's best run
-    (throughput numbers are best-of; host scheduler noise at smoke scale
-    otherwise swamps the comparison).  ``plan`` serves a mixed-fidelity
+    ``repeats`` reruns both drivers and keeps each one's best run for the
+    headline numbers plus the per-run median (``tok_s_median``) for stable
+    ratios -- host scheduler noise at smoke scale otherwise swamps any
+    single-draw comparison.  ``plan`` serves a mixed-fidelity
     DeploymentPlan through the unchanged scheduler (implies cim).
+
+    ``draft_k > 0`` turns on plan-cascade speculative rounds in the
+    scheduler (``draft_plan`` or the derived all-analog shadow of the
+    serving plan, same packed weights).  Greedy tokens stay bit-identical
+    to the non-speculative lock-step baseline, so the parity assert is
+    kept; at temperature > 0 speculative sampling is only
+    distribution-identical and the lock-step comparison is skipped.
     """
+    if draft_k and temperature > 0:
+        compare_lockstep = False
     cfg = get_config(arch, smoke=smoke)
     if plan is not None:
         cim = True
@@ -206,12 +420,17 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
         params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
         t_pack = time.time() - t0
 
+    if draft_k and draft_plan is None:
+        from ..plan import draft_plan_for_model
+        draft_plan = draft_plan_for_model(cfg, draft_adc_bits)
+
     requests = mixed_length_requests(n_requests, prompt_len, cfg.vocab_size,
                                      stop_lengths=stop_lengths, seed=seed)
     t0 = time.time()
     sched = ContinuousBatchingScheduler(
         params, cfg, slots=slots, prompt_len=prompt_len,
-        max_new_cap=max(stop_lengths), temperature=temperature, seed=seed)
+        max_new_cap=max(stop_lengths), temperature=temperature, seed=seed,
+        draft_k=draft_k, draft_plan=draft_plan)
     sched.compile_for(n_requests, lockstep=compare_lockstep)
     t_compile = time.time() - t0
 
@@ -225,7 +444,12 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                  n_requests=n_requests, stop_lengths=list(stop_lengths),
                  cim=cim, packed=pack, compile_s=round(t_compile, 4),
                  pack_s=round(t_pack, 4), repeats=repeats,
+                 tok_s_median=round(
+                     statistics.median(r.tok_s for r in runs), 2),
                  continuous=report.summary())
+    if draft_k:
+        stats["draft_k"] = draft_k
+        stats["draft_plan"] = draft_plan.summary()["<default>"]
     if compare_lockstep:
         base_runs = [sched.run_lockstep(requests) for _ in range(repeats)]
         base = max(base_runs, key=lambda r: r.tok_s)
@@ -235,11 +459,16 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                 got[rid], want[rid],
                 err_msg=f"request {rid}: continuous batching changed tokens "
                         "vs the lock-step baseline")
+        base_median = statistics.median(r.tok_s for r in base_runs)
         stats["lockstep"] = base.summary()
+        stats["lockstep_tok_s_median"] = round(base_median, 2)
         stats["tokens_match_lockstep"] = True
         stats["speedup_vs_lockstep"] = round(
-            report.tok_s / base.tok_s, 2) if base.tok_s > 0 else float("nan")
+            stats["tok_s_median"] / base_median, 2) if base_median > 0 \
+            else float("nan")
     mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
+    if draft_k:
+        mode += f"+spec-k{draft_k}"
     line = (f"[serve-cb] {arch} ({mode}): {n_requests} reqs x "
             f"stops{tuple(stop_lengths)} over {slots} slots | "
             f"{report.tok_s:.1f} tok/s, occupancy {report.occupancy:.0%}")
@@ -267,12 +496,29 @@ def main():
                     help="continuous batching over a mixed-length queue")
     ap.add_argument("--requests", type=int, default=8,
                     help="(--continuous) queued request count")
+    ap.add_argument("--speculative", action="store_true",
+                    help="plan-cascade speculative decoding (analog draft "
+                         "/ deployed verify from one packed weight set)")
+    ap.add_argument("--draft-k", type=int, default=8,
+                    help="draft block length per speculative round")
+    ap.add_argument("--draft-adc-bits", type=int, default=None,
+                    help="draft plan SAR width (default: smallest "
+                         "non-clipping width per entry)")
     args = ap.parse_args()
     if args.continuous:
         serve_continuous(args.arch, smoke=args.smoke, slots=args.batch,
                          prompt_len=args.prompt_len,
                          n_requests=args.requests, cim=args.cim,
-                         pack=args.pack, temperature=args.temperature)
+                         pack=args.pack, temperature=args.temperature,
+                         draft_k=args.draft_k if args.speculative else 0,
+                         draft_adc_bits=args.draft_adc_bits)
+    elif args.speculative:
+        serve_speculative(args.arch, smoke=args.smoke, batch=args.batch,
+                          prompt_len=args.prompt_len, gen=args.gen,
+                          draft_k=args.draft_k,
+                          draft_adc_bits=args.draft_adc_bits,
+                          temperature=args.temperature, cim=args.cim,
+                          pack=args.pack)
     else:
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               prompt_len=args.prompt_len, gen=args.gen, cim=args.cim,

@@ -30,6 +30,7 @@ Families:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
@@ -553,6 +554,53 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
         cache["k"], cache["v"] = ck, cv
     adv = jnp.int32(1) if live is None else live.astype(jnp.int32)
     cache["pos"] = pos + adv
+    return _logits(params, cfg, x), cache
+
+
+def verify_step(params, cfg: ModelConfig, tokens: Array,
+                cache: Dict) -> Tuple[Array, Dict]:
+    """tokens (B, S) -> logits (B, S, V): the speculative-verify forward.
+
+    All S = k+1 positions of a draft block go through the model in ONE
+    call -- every projection sees an (B*S, K) GEMM, which at k+1 <= 32
+    stays on the prepacked skinny-M kernel path -- writing KV rows at
+    per-slot positions ``cache["pos"] + [0..S)``.  ``cache["pos"]`` is
+    NOT advanced here: the caller commits the accepted prefix by setting
+    pos itself, which is also the whole rollback story -- rows written
+    beyond the committed pos are invisible (the attention validity
+    horizon masks ``k_pos >= pos + S_query``) and are simply overwritten
+    by the next round's writes.
+
+    Position i's logits are bit-identical to what ``decode_step`` would
+    produce after committing tokens[:, :i+1]: the attention route is
+    pinned to the plain kernel (decode's own S==1 route; flash's online
+    softmax has a different reduction order), and everything else is
+    row-local float math.  Restricted to positional-cache families:
+    SSM/conv recurrent state advances destructively and cannot be rolled
+    back by masking.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "speculative verify needs positional KV rollback; the "
+            f"{cfg.family!r} family carries recurrent SSM/conv state that "
+            "a draft block cannot roll back")
+    if cfg.attn_impl != "plain":
+        cfg = dataclasses.replace(cfg, attn_impl="plain")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = tokens.shape[1]
+    pos = cache["pos"]
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    cache = dict(cache)
+
+    def body(x, scanned):
+        blk, is_local, ck, cv = scanned
+        x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
+                                   kv=(ck, cv), cache_pos=pos)
+        return x, new_kv
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["layers"], _is_local_arr(cfg), cache["k"],
+                  cache["v"]))
+    cache["k"], cache["v"] = ck, cv
     return _logits(params, cfg, x), cache
 
 

@@ -22,6 +22,12 @@ from .candidates import (  # noqa: F401
     min_adc_bits,
     prototype_candidate,
 )
+from .draft import (  # noqa: F401
+    derive_draft_entry,
+    derive_draft_plan,
+    draft_plan_for_model,
+    draft_plan_sweep,
+)
 from .profiler import (  # noqa: F401
     SensitivityProfile,
     calibration_batch,

@@ -1,0 +1,108 @@
+"""Draft-plan derivation for plan-cascade speculative decoding.
+
+The paper's D/A boundary trades accuracy for conversion cost; PR 4 made it
+a per-projection deployment decision.  Speculative decoding turns the same
+knob into a LATENCY knob: an aggressive all-analog plan drafts k tokens
+cheaply, the deployed plan verifies all k+1 positions in one wide skinny-M
+GEMM, and standard accept/resample keeps the output distribution exactly
+the verify plan's.  The key system property (``core.engine.pack_compatible``)
+is that an all-analog entry with the pack's ``n_mag_bits``/``acc_len`` can
+serve the SAME ``PackedCimWeights`` arrays the verify plan uses -- zero
+extra memory, zero repacks: the software twin of both splits sharing every
+bit-cell of the 2D-weighted capacitor array.
+
+Derivation maps each verify entry to its analog shadow:
+
+  float  -> unchanged (the projection is off-macro; draft == verify there,
+            so it contributes no acceptance loss);
+  exact/fast -> ``n_dcim_products=0`` at the same ``acc_len``, with
+            ``adc_bits`` the aggressiveness knob: ``min_adc_bits`` (no
+            clipping -- quantization/rounding is the only draft error) down
+            to narrower SARs that clip large accumulates and draft faster
+            but get rejected more.
+
+Acceptance is therefore a function of the D/A split distance between the
+two plans -- ``draft_plan_sweep`` enumerates that axis for the benchmark
+study (acceptance rate / tokens-per-round / tok/s per point).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from ..core.ccim import DEFAULT_CONFIG
+from .candidates import min_adc_bits
+from .plan import DeploymentPlan, PlanEntry
+
+
+def derive_draft_entry(entry: PlanEntry, adc_bits: Optional[int] = None,
+                       adc_delta: int = 0) -> PlanEntry:
+    """The all-analog shadow of one plan entry (same pack, no planes).
+
+    ``adc_bits`` forces an absolute SAR width; otherwise the width is the
+    entry's conservative no-clip ``min_adc_bits`` plus ``adc_delta``
+    (negative deltas draft more aggressively -- narrower SARs clip large
+    accumulates).  Resolving per entry matters because different
+    ``acc_len`` need different no-clip widths.
+    """
+    if entry.fidelity == "float":
+        return entry
+    cfg = dataclasses.replace(entry.cfg, n_dcim_products=0)
+    bits = adc_bits if adc_bits is not None else max(
+        1, min_adc_bits(cfg) + adc_delta)
+    cfg = dataclasses.replace(cfg, adc_bits=bits)
+    return PlanEntry(cfg=cfg, fidelity="fast",
+                     label=f"draft-analog0/adc{bits}/L{cfg.acc_len}")
+
+
+def derive_draft_plan(plan: DeploymentPlan, adc_bits: Optional[int] = None,
+                      adc_delta: int = 0) -> DeploymentPlan:
+    """Entry-wise analog shadow of a deployment plan.
+
+    The mapping is key-preserving, so path resolution (exact / basename /
+    default) matches the verify plan site for site, and members of a fused
+    projection group that agreed under the verify plan still agree under
+    the draft plan (``layers.fusion_partitions`` keeps fusing them).
+    """
+    return DeploymentPlan.from_dict(
+        {p: derive_draft_entry(e, adc_bits, adc_delta)
+         for p, e in plan.entries},
+        default=derive_draft_entry(plan.default, adc_bits, adc_delta))
+
+
+def draft_plan_for_model(model_cfg, adc_bits: Optional[int] = None,
+                         adc_delta: int = 0) -> DeploymentPlan:
+    """Draft plan for any model config (planned or global-CIM).
+
+    Accepts anything with ``cim_plan`` / ``cim_cfg`` / ``cim_fidelity``
+    attributes.  A planned config derives entry-wise; a global-CIM config
+    derives from a uniform plan over its single entry.  For a non-CIM
+    (float) config this degenerates to draft == verify -- self-speculation,
+    where acceptance is 1 and the win is pure multi-token amortization.
+    """
+    plan = getattr(model_cfg, "cim_plan", None)
+    if plan is None:
+        base = PlanEntry(cfg=getattr(model_cfg, "cim_cfg", None)
+                         or DEFAULT_CONFIG,
+                         fidelity=getattr(model_cfg, "cim_fidelity", "fast"))
+        plan = DeploymentPlan.uniform(base)
+    return derive_draft_plan(plan, adc_bits, adc_delta)
+
+
+def draft_plan_sweep(plan: DeploymentPlan,
+                     adc_deltas: Sequence[int] = (0, -1, -2),
+                     ) -> List[Tuple[str, DeploymentPlan]]:
+    """(label, draft_plan) points of increasing draft aggressiveness.
+
+    Delta 0 is the conservative no-clip analog shadow; each further delta
+    narrows every entry's SAR by that many bits below its own no-clip
+    width.  Labels carry the default entry's resulting width for display.
+    """
+    points = []
+    for d in adc_deltas:
+        dp = derive_draft_plan(plan, adc_delta=d)
+        cands = [e for _, e in dp.entries] + [dp.default]
+        named = next((e for e in cands if e.fidelity != "float"),
+                     derive_draft_entry(PlanEntry(), adc_delta=d))
+        points.append((f"analog0/adc{named.cfg.adc_bits}", dp))
+    return points

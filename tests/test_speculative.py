@@ -1,0 +1,396 @@
+"""Plan-cascade speculative decoding: analog draft / deployed verify from
+one packed weight set (plan/draft.py, lm.verify_step, scheduler spec mode).
+
+The load-bearing properties:
+
+  * pack compatibility -- an all-analog config with the pack's
+    ``n_mag_bits``/``acc_len`` serves the SAME PackedCimWeights a hybrid
+    plan packed (the folded planes are simply never read), so the draft
+    plan costs zero extra memory and zero repacks;
+  * distribution identity -- greedy speculative output is BIT-identical
+    to non-speculative decode (the accept rule keeps exactly the verify
+    model's argmax chain), and at temperature > 0 the scheduler's
+    per-request key streams keep pooled speculative runs bit-identical
+    to solo speculative runs;
+  * scheduler edges -- EOS landing inside an accepted draft block,
+    ``max_new`` truncating mid-block, and mid-stream slot refill while
+    other slots are mid-draft must all preserve token parity with solo
+    and non-speculative runs.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.ccim import DEFAULT_CONFIG
+from repro.core.engine import (pack_cim_weights, pack_compatible,
+                               packed_cim_matmul)
+from repro.launch.scheduler import (ContinuousBatchingScheduler,
+                                    mixed_length_requests)
+from repro.models import lm
+from repro.plan import (FLOAT_ENTRY, HYBRID_ENTRY, DeploymentPlan,
+                        derive_draft_plan, draft_plan_for_model,
+                        draft_plan_sweep, min_adc_bits)
+
+
+def _params(arch, cim=False, pack=False, seed=0):
+    cfg = get_config(arch, smoke=True)
+    if cim:
+        cfg = dataclasses.replace(cfg, cim_mode=True)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    if pack:
+        params = jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params)
+    return params, cfg
+
+
+def _pool_tokens(params, cfg, requests, prompt_len, cap, slots=2,
+                 temperature=0.0, draft_k=0, draft_plan=None):
+    pool = ContinuousBatchingScheduler(params, cfg, slots=slots,
+                                       prompt_len=prompt_len,
+                                       max_new_cap=cap,
+                                       temperature=temperature,
+                                       draft_k=draft_k,
+                                       draft_plan=draft_plan)
+    report = pool.run(requests)
+    return report.tokens_by_rid(), report
+
+
+# ---------------------------------------------------------------------------
+# pack compatibility: one pack, two plans
+# ---------------------------------------------------------------------------
+
+
+def _analog_cfg(base=DEFAULT_CONFIG, adc_bits=None):
+    cfg = dataclasses.replace(base, n_dcim_products=0)
+    return dataclasses.replace(
+        cfg, adc_bits=adc_bits if adc_bits is not None else min_adc_bits(cfg))
+
+
+def test_pack_compatible_predicate():
+    hybrid = DEFAULT_CONFIG
+    analog = _analog_cfg()
+    assert pack_compatible(hybrid, hybrid)
+    assert pack_compatible(hybrid, analog)
+    # narrower SAR on the analog side is still the same layout
+    assert pack_compatible(hybrid, dataclasses.replace(analog, adc_bits=5))
+    # but an analog pack cannot serve a hybrid plan (no folded planes)...
+    assert not pack_compatible(analog, hybrid)
+    # ...and layout-bearing fields must match exactly
+    assert not pack_compatible(
+        hybrid, dataclasses.replace(analog, acc_len=hybrid.acc_len * 2))
+    assert not pack_compatible(
+        hybrid, dataclasses.replace(analog, n_mag_bits=hybrid.n_mag_bits - 1))
+
+
+def test_hybrid_pack_serves_analog_subset_bit_identical():
+    """Weights packed under the hybrid config, served under its all-analog
+    shadow: bit-identical to packing under the analog config directly."""
+    K, N, M = 64, 32, 4
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (K, N))
+    x = jax.random.normal(kx, (M, K))
+    hybrid, analog = DEFAULT_CONFIG, _analog_cfg()
+    pk_h = jax.jit(pack_cim_weights, static_argnums=(1,))(w, hybrid)
+    pk_a = jax.jit(pack_cim_weights, static_argnums=(1,))(w, analog)
+    y_sub = packed_cim_matmul(x, pk_h, analog)
+    y_ref = packed_cim_matmul(x, pk_a, analog)
+    np.testing.assert_array_equal(np.asarray(y_sub), np.asarray(y_ref))
+    # the hybrid pack still serves the hybrid plan unchanged
+    y_h = packed_cim_matmul(x, pk_h, hybrid)
+    assert np.asarray(y_h).shape == (M, N)
+    # a clipping-width subset also goes through (values differ, no raise)
+    packed_cim_matmul(x, pk_h, dataclasses.replace(analog, adc_bits=5))
+
+
+def test_pack_mismatch_still_raises():
+    K, N = 64, 32
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, K))
+    pk = jax.jit(pack_cim_weights, static_argnums=(1,))(w, DEFAULT_CONFIG)
+    bad = dataclasses.replace(_analog_cfg(), acc_len=DEFAULT_CONFIG.acc_len * 2)
+    with pytest.raises(ValueError, match="packed for a different"):
+        packed_cim_matmul(x, pk, bad)
+
+
+# ---------------------------------------------------------------------------
+# draft-plan derivation
+# ---------------------------------------------------------------------------
+
+
+def test_derive_draft_plan_entries():
+    plan = DeploymentPlan.from_dict(
+        {"attn.q": HYBRID_ENTRY, "lm_head": FLOAT_ENTRY},
+        default=HYBRID_ENTRY)
+    dp = derive_draft_plan(plan)
+    by_path = dict(dp.entries)
+    # float sites stay float (off-macro: draft == verify there)
+    assert by_path["lm_head"] == FLOAT_ENTRY
+    # CIM sites lose their DCIM planes but keep the pack-layout fields
+    drafted = by_path["attn.q"]
+    assert drafted.cfg.n_dcim_products == 0
+    assert drafted.cfg.acc_len == HYBRID_ENTRY.cfg.acc_len
+    assert drafted.cfg.n_mag_bits == HYBRID_ENTRY.cfg.n_mag_bits
+    assert drafted.cfg.adc_bits == min_adc_bits(
+        dataclasses.replace(HYBRID_ENTRY.cfg, n_dcim_products=0))
+    assert pack_compatible(HYBRID_ENTRY.cfg, drafted.cfg)
+    assert drafted.label.startswith("draft-analog0/")
+    assert dp.default.cfg.n_dcim_products == 0
+
+
+def test_draft_plan_sweep_widths():
+    plan = DeploymentPlan.uniform(HYBRID_ENTRY)
+    points = draft_plan_sweep(plan, adc_deltas=(0, -1, -2, -3))
+    assert len(points) == 4
+    widths = []
+    for label, dp in points:
+        assert pack_compatible(HYBRID_ENTRY.cfg, dp.default.cfg)
+        widths.append(dp.default.cfg.adc_bits)
+        assert label == f"analog0/adc{dp.default.cfg.adc_bits}"
+    # strictly decreasing SAR width = strictly increasing aggressiveness
+    assert widths == sorted(widths, reverse=True)
+    assert len(set(widths)) == len(widths)
+
+
+def test_draft_plan_for_model_global_cim():
+    cfg = dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                              cim_mode=True)
+    dp = draft_plan_for_model(cfg)
+    assert dp.default.cfg.n_dcim_products == 0
+    assert dp.default.fidelity == "fast"
+
+
+# ---------------------------------------------------------------------------
+# verify_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cim,pack", [(False, False), (True, True)])
+def test_verify_step_matches_decode_chain(cim, pack):
+    """One wide verify forward over (B, S) tokens produces the same logits
+    as S chained decode steps, bitwise -- for fp and packed-CIM models --
+    and does NOT advance the cache position (the caller commits)."""
+    arch = "minicpm-2b" if cim else "musicgen-medium"
+    params, cfg = _params(arch, cim=cim, pack=pack)
+    B, P, S = 2, 8, 4
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P),
+                                      dtype=np.int32))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S),
+                                    dtype=np.int32))
+    cache = lm.init_cache(cfg, B, P + S + 1)
+    _, cache = lm.prefill(params, cfg, prompt, cache)
+
+    chain = []
+    c = dict(cache)
+    for i in range(S):
+        lg, c = lm.decode_step(params, cfg, toks[:, i:i + 1], c)
+        chain.append(lg[:, -1])
+    chained = jnp.stack(chain, axis=1)
+
+    vlg, vcache = lm.verify_step(params, cfg, toks, dict(cache))
+    np.testing.assert_array_equal(np.asarray(vlg), np.asarray(chained))
+    np.testing.assert_array_equal(np.asarray(vcache["pos"]),
+                                  np.asarray(cache["pos"]))
+
+
+def test_verify_step_rejects_recurrent_families():
+    params, cfg = _params("mamba2-130m")
+    cache = lm.init_cache(cfg, 1, 8)
+    toks = jnp.zeros((1, 3), jnp.int32)
+    with pytest.raises(NotImplementedError):
+        lm.verify_step(params, cfg, toks, cache)
+
+
+def test_scheduler_rejects_speculative_ssm():
+    params, cfg = _params("mamba2-130m")
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingScheduler(params, cfg, slots=1, prompt_len=8,
+                                    max_new_cap=4, draft_k=2)
+
+
+# ---------------------------------------------------------------------------
+# speculative scheduler: distribution identity
+# ---------------------------------------------------------------------------
+
+
+def test_spec_pool_greedy_bit_identical_to_nonspec():
+    """Packed-CIM pool with an analog draft plan: greedy tokens are
+    bit-identical to the non-speculative pool, and the report carries the
+    draft counters."""
+    params, cfg = _params("minicpm-2b", cim=True, pack=True)
+    P, CAP = 8, 6
+    reqs = mixed_length_requests(4, P, cfg.vocab_size, stop_lengths=(3, 6, 4))
+    base, _ = _pool_tokens(params, cfg, reqs, P, CAP)
+    dp = draft_plan_for_model(cfg)
+    got, report = _pool_tokens(params, cfg, reqs, P, CAP, draft_k=3,
+                               draft_plan=dp)
+    for rid, toks in base.items():
+        np.testing.assert_array_equal(got[rid], toks)
+    assert report.n_drafted > 0
+    assert 0.0 <= report.acceptance_rate <= 1.0
+    assert report.n_steps < sum(len(t) for t in base.values())
+
+
+def test_aggressive_draft_rejections_stay_bit_identical():
+    """A clipping draft plan (SAR far below the no-clip width) gets real
+    rejections -- and the accept/correct rule still reproduces the verify
+    chain exactly."""
+    params, cfg = _params("minicpm-2b", cim=True, pack=True)
+    P, CAP = 8, 6
+    reqs = mixed_length_requests(2, P, cfg.vocab_size, stop_lengths=(6,))
+    base, _ = _pool_tokens(params, cfg, reqs, P, CAP)
+    dp = draft_plan_for_model(cfg, adc_bits=5)
+    got, report = _pool_tokens(params, cfg, reqs, P, CAP, draft_k=3,
+                               draft_plan=dp)
+    for rid, toks in base.items():
+        np.testing.assert_array_equal(got[rid], toks)
+    assert report.acceptance_rate < 1.0   # the clipping draft does diverge
+
+
+def test_temperature_spec_pool_matches_spec_solo():
+    """Sampled speculative decoding: per-request key streams keep pooled
+    and solo speculative runs bit-identical (same rejection-sampling and
+    resample draws per round)."""
+    params, cfg = _params("musicgen-medium")
+    P, CAP, T = 8, 6, 0.7
+    reqs = mixed_length_requests(4, P, cfg.vocab_size, stop_lengths=(3, 6))
+    solo = {}
+    for r in reqs:
+        toks, _ = _pool_tokens(params, cfg, [r], P, CAP, slots=1,
+                               temperature=T, draft_k=3)
+        solo[r.rid] = toks[r.rid]
+    got, _ = _pool_tokens(params, cfg, reqs, P, CAP, temperature=T,
+                          draft_k=3)
+    for rid, toks in got.items():
+        np.testing.assert_array_equal(toks, solo[rid])
+
+
+# ---------------------------------------------------------------------------
+# speculative scheduler: variable tokens-per-step edges
+# ---------------------------------------------------------------------------
+
+
+def test_eos_inside_accepted_draft_block():
+    """Stop tokens chosen to land in the MIDDLE of an accepted draft block
+    end the request exactly where the solo non-speculative stream does
+    (stop token included, nothing after it emitted)."""
+    params, cfg = _params("musicgen-medium")
+    P, CAP = 8, 10
+    reqs = mixed_length_requests(2, P, cfg.vocab_size,
+                                 stop_lengths=(CAP, CAP))
+    base, _ = _pool_tokens(params, cfg, reqs, P, CAP)
+
+    stopped, want = [], {}
+    for r, k in zip(reqs, (2, 5)):     # both fall inside a k=4 draft block
+        stop = int(base[r.rid][k])
+        first = int(np.nonzero(base[r.rid] == stop)[0][0])
+        want[r.rid] = base[r.rid][:first + 1]
+        stopped.append(dataclasses.replace(r, stop_token=stop))
+
+    got, _ = _pool_tokens(params, cfg, stopped, P, CAP, draft_k=4)
+    assert len(got[stopped[0].rid]) != len(got[stopped[1].rid])
+    for rid, toks in want.items():
+        np.testing.assert_array_equal(got[rid], toks)
+        assert got[rid][-1] == dict((r.rid, r) for r in stopped)[rid].stop_token
+
+
+def test_max_new_truncates_mid_block():
+    """Per-request max_new budgets that are not multiples of the draft
+    block length truncate mid-block without emitting past the budget."""
+    params, cfg = _params("musicgen-medium")
+    P, CAP = 8, 7
+    reqs = mixed_length_requests(3, P, cfg.vocab_size, stop_lengths=(3, 7, 5))
+    base, _ = _pool_tokens(params, cfg, reqs, P, CAP)
+    got, _ = _pool_tokens(params, cfg, reqs, P, CAP, draft_k=4)
+    for rid, toks in base.items():
+        np.testing.assert_array_equal(got[rid], toks)
+        assert len(got[rid]) == reqs[rid].max_new_tokens
+
+
+def test_refill_mid_draft_bit_identical_to_solo():
+    """3x more requests than slots: slots refill mid-stream while their
+    neighbors are mid-draft; every request's tokens equal its solo
+    NON-speculative run exactly (greedy identity composed with the
+    refill determinism contract)."""
+    params, cfg = _params("musicgen-medium")
+    P, CAP = 8, 6
+    reqs = mixed_length_requests(6, P, cfg.vocab_size,
+                                 stop_lengths=(2, 6, 3, 5))
+    solo = {}
+    for r in reqs:
+        toks, _ = _pool_tokens(params, cfg, [r], P, CAP, slots=1)
+        solo[r.rid] = toks[r.rid]
+    got, report = _pool_tokens(params, cfg, reqs, P, CAP, draft_k=3)
+    assert report.n_admits == len(reqs)
+    for rid, toks in got.items():
+        np.testing.assert_array_equal(toks, solo[rid])
+
+
+# ---------------------------------------------------------------------------
+# autotune cache robustness (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tuning_cache(tmp_path, monkeypatch):
+    from repro.kernels.ccim_matmul import autotune as at
+    path = tmp_path / "TUNING_CACHE.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+
+    def reset():
+        at._state.update(path=None, entries=None)
+        at.tuned_chunk_block.cache_clear()
+
+    reset()
+    yield at, path, reset
+    reset()
+
+
+@pytest.mark.parametrize("garbage", [
+    '{"version": 1, "entr',                       # truncated mid-write
+    "not json at all {{{",                        # plain garbage
+    "[1, 2, 3]",                                  # valid JSON, wrong shape
+    '{"version": 1, "entries": [1, 2]}',          # entries not a dict
+])
+def test_corrupt_tuning_cache_falls_back_with_warning(tuning_cache, garbage):
+    at, path, reset = tuning_cache
+    path.write_text(garbage)
+    with pytest.warns(UserWarning, match="tuning cache"):
+        assert at.lookup("anything") is None
+    # heuristic defaults still come out (trace-time lookups must not raise)
+    from repro.core.ccim import _CHUNK_BLOCK, _SKINNY_M
+    reset()
+    with pytest.warns(UserWarning):
+        assert at.tuned_chunk_block(4, 64, 128, 16) == 64      # skinny -> C
+        assert at.tuned_chunk_block(256, 64, 128, 16) == (
+            64 if 256 <= _SKINNY_M else _CHUNK_BLOCK)
+    assert at.tuned_skinny_blocks(64, 128, 16, 4) is None
+
+
+def test_non_dict_cache_entry_is_ignored(tuning_cache):
+    at, path, reset = tuning_cache
+    key = at.chunk_key(4, 64, 128, 16)
+    path.write_text(
+        '{"version": 1, "entries": {"%s": 7}}' % key)
+    # a scalar where an entry dict belongs is dropped, not crashed on
+    assert at.lookup(key) is None
+    assert at.tuned_chunk_block(4, 64, 128, 16) == 64
+
+
+def test_valid_cache_and_missing_cache(tuning_cache):
+    at, path, reset = tuning_cache
+    # missing file: silent heuristic fallback, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert at.lookup("x") is None
+    key = at.chunk_key(4, 64, 128, 16)
+    path.write_text(
+        '{"version": 1, "entries": {"%s": {"chunk_block": 8}}}' % key)
+    reset()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert at.tuned_chunk_block(4, 64, 128, 16) == 8
