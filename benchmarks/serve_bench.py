@@ -54,6 +54,21 @@ _SPEC_SPEEDUP_FLOOR = 1.5
 # the committed sweep point is the conservative no-clip draft; acceptance
 # may not drop more than this (absolute) below the committed value
 _ACCEPTANCE_SLACK = 0.05
+# multi-tenant paged-KV acceptance gate: the paged scheduler must either
+# beat the contiguous pool on throughput outright, or shrink peak
+# resident KV bytes at near-iso throughput (both ratios are same-host,
+# same-process, so they cancel machine speed)
+_PAGED_TOK_S_FLOOR = 1.3
+_PAGED_KV_REDUCTION_FLOOR = 2.0
+# near-iso throughput bar for the KV-reduction arm of the gate: the
+# measured paged/contiguous ratio at smoke scale swings 0.9-1.4x run to
+# run on a noisy host (median ~1.0), so the floor sits below the
+# observed spread rather than on top of it
+_PAGED_ISO_TOK_S = 0.8
+# chunked prefill bounds per-iteration admission work, so the paged
+# pool's worst-iteration/median-decode-step stall factor may not exceed
+# the contiguous pool's (whole-prompt admits) by more than this slack
+_STALL_RATIO_SLACK = 1.25
 
 
 def _median_rate(row: dict) -> float:
@@ -127,10 +142,212 @@ def check_regression(new: dict, baseline_path: str,
                     f"dropped to {acc:.3f} (committed {base_acc:.3f}): the "
                     f"plan cascade got lossier without a plan change")
 
+    mt = new.get("multi_tenant")
+    if mt is not None:
+        if not mt.get("token_parity"):
+            raise SystemExit("multi-tenant paged token parity failed")
+        r_tok, r_kv = mt["paged_vs_contiguous_tok_s"], mt["kv_reduction"]
+        print(f"# regression gate: paged/contiguous tok/s {r_tok:.2f}x, "
+              f"peak-KV reduction {r_kv:.2f}x (need >= "
+              f"{_PAGED_TOK_S_FLOOR}x tok/s OR >= "
+              f"{_PAGED_KV_REDUCTION_FLOOR}x KV at >= "
+              f"{_PAGED_ISO_TOK_S}x tok/s)")
+        if not (r_tok >= _PAGED_TOK_S_FLOOR
+                or (r_kv >= _PAGED_KV_REDUCTION_FLOOR
+                    and r_tok >= _PAGED_ISO_TOK_S)):
+            raise SystemExit(
+                f"paged KV pool misses its acceptance gate: "
+                f"{r_tok:.2f}x tok/s, {r_kv:.2f}x KV reduction")
+        s_pg = mt["paged"]["stall_factor"]
+        s_ct = mt["contiguous"]["stall_factor"]
+        print(f"# regression gate: admission stall factor paged "
+              f"{s_pg:.2f} vs contiguous {s_ct:.2f} "
+              f"(slack {_STALL_RATIO_SLACK}x)")
+        if s_pg > _STALL_RATIO_SLACK * s_ct:
+            raise SystemExit(
+                f"chunked prefill stopped bounding admission stalls: "
+                f"paged worst-iteration factor {s_pg:.2f} > "
+                f"{_STALL_RATIO_SLACK}x contiguous {s_ct:.2f}")
+        base_mt = base.get("multi_tenant")
+        if base_mt is not None:
+            # committed-relative gates: kv_reduction is deterministic
+            # (pure block accounting) so it always gets one; the tok/s
+            # ratio only when the committed win is throughput-mode --
+            # in KV-reduction mode the absolute near-iso bar above
+            # already governs it and a committed 0.95x would otherwise
+            # ratchet a noise floor into the gate
+            keys = ["kv_reduction"]
+            if (base_mt.get("paged_vs_contiguous_tok_s") or 0) \
+                    >= _PAGED_TOK_S_FLOOR:
+                keys.append("paged_vs_contiguous_tok_s")
+            for key in keys:
+                commit = base_mt.get(key)
+                if commit and mt[key] < (1.0 - tolerance) * commit:
+                    raise SystemExit(
+                        f"multi-tenant {key} regressed: {mt[key]:.2f} is "
+                        f">{tolerance:.0%} below committed {commit:.2f}")
+
+
+def multi_tenant_trace(n_requests: int, max_prompt: int, vocab: int,
+                       block_size: int, n_tenants: int = 3, seed: int = 0,
+                       arrival_rate: float = 0.5):
+    """Open-loop multi-tenant workload: ``n_tenants`` tenants each with a
+    shared system prompt (a block-aligned prefix, so the paged scheduler
+    can deduplicate it), per-request tails of mixed length, per-request
+    decode budgets, and Poisson arrivals (exponential inter-arrival times
+    in scheduler-iteration units).  Prompts top out at ``max_prompt`` --
+    the service's STATIC context limit is larger (run_multi_tenant's
+    ``prompt_len``), which is the realistic serving shape: a contiguous
+    pool must reserve and prefill the context limit for every slot, while
+    actual traffic is mostly chat-sized with one long-prompt stressor
+    (request 0).  Returns (requests, arrival_iters)."""
+    import numpy as np
+    from repro.launch.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    pre_blocks = [3, 1, 2, 4, 2, 3][:n_tenants]
+    prefixes = [rng.integers(0, vocab, nb * block_size, dtype=np.int32)
+                for nb in pre_blocks]
+    reqs, arrivals = [], []
+    t = 0.0
+    for i in range(n_requests):
+        tenant = i % n_tenants            # round-robin keeps tenants mixed
+        pre = prefixes[tenant]
+        if i == 0:                        # one long-prompt request: the
+            tail = max_prompt - len(pre)  # admission-stall stressor
+        else:                             # the rest are chat-sized
+            tail = int(rng.integers(
+                1, min(max_prompt - len(pre), 3 * block_size) + 1))
+        prompt = np.concatenate(
+            [pre, rng.integers(0, vocab, tail, dtype=np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(4, 13))))
+        arrivals.append(int(t))
+        t += rng.exponential(1.0 / arrival_rate)
+    return reqs, arrivals
+
+
+def run_multi_tenant(arch: str = "minicpm-2b", smoke: bool = True,
+                     slots: int = 3, prompt_len: int = 128,
+                     max_prompt: int = 64, n_requests: int = 10,
+                     block_size: int = 8, prefill_chunk: int = 16,
+                     repeats: int = 3, seed: int = 0) -> dict:
+    """Paged vs contiguous KV on the multi-tenant trace.
+
+    Three runs of the SAME workload: the contiguous pool (prompts padded
+    to the static length -- all a contiguous layout can do with mixed
+    lengths), the paged pool single-shot without sharing (the parity
+    reference), and the paged pool with chunked prefill + shared-prefix
+    reuse (the candidate).  Token parity between the two paged runs is
+    asserted bit-exactly; throughput comes from the pure device loop
+    (median of ``repeats``) and latency structure (TTFT, per-iteration
+    stall factor) from the instrumented runner stepping the identical
+    compiled iteration."""
+    import statistics as _stats
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch.paging import PagedLayout, cdiv
+    from repro.launch.scheduler import ContinuousBatchingScheduler, Request
+    from repro.models import lm
+
+    cfg = get_config(arch, smoke=smoke)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    cap = 12
+    reqs, arrivals = multi_tenant_trace(n_requests, max_prompt,
+                                        cfg.vocab_size, block_size,
+                                        seed=seed)
+    # the contiguous pool can only serve mixed lengths by padding every
+    # prompt to the static context limit -- full-length prefill AND
+    # full-length KV reservation per slot
+    padded = [Request(rid=r.rid,
+                      prompt=np.concatenate(
+                          [r.prompt, np.zeros(prompt_len - len(r.prompt),
+                                              np.int32)]),
+                      max_new_tokens=r.max_new_tokens,
+                      stop_token=r.stop_token) for r in reqs]
+    n_tbl = cdiv(prompt_len + cap, block_size)
+    lay = PagedLayout(block_size=block_size, n_tbl=n_tbl,
+                      n_blocks=2 * slots * cdiv(max_prompt + cap,
+                                                block_size) + 8)
+
+    contig = ContinuousBatchingScheduler(
+        params, cfg, slots=slots, prompt_len=prompt_len, max_new_cap=cap,
+        seed=seed)
+    paged = ContinuousBatchingScheduler(
+        params, cfg, slots=slots, prompt_len=prompt_len, max_new_cap=cap,
+        seed=seed, paged=lay, prefill_chunk=prefill_chunk,
+        prefix_sharing=True)
+    paged_ref = ContinuousBatchingScheduler(
+        params, cfg, slots=slots, prompt_len=prompt_len, max_new_cap=cap,
+        seed=seed, paged=lay, prefix_sharing=False)
+
+    # bit-exact parity: chunked + prefix-shared vs single-shot unshared
+    want = paged_ref.run(reqs).tokens_by_rid()
+    got = paged.run(reqs).tokens_by_rid()
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"request {rid}: chunked/shared paged prefill changed "
+                    "tokens vs single-shot paged")
+
+    pg_runs = [paged.run(reqs, arrivals) for _ in range(repeats)]
+    ct_runs = [contig.run(padded, arrivals) for _ in range(repeats)]
+    pg_tok = _stats.median(r.tok_s for r in pg_runs)
+    ct_tok = _stats.median(r.tok_s for r in ct_runs)
+    pg_rep, pg_tl = paged.run_instrumented(reqs, arrivals)
+    ct_rep, ct_tl = contig.run_instrumented(padded, arrivals)
+
+    def stall(timeline, step_branch):
+        """Worst-iteration / median-decode-step duration ratio: how long
+        the slowest single iteration (a long-prompt admit, in the
+        contiguous pool) starves every live decoder."""
+        it = timeline["iter_s"]
+        steps = it[timeline["branch"] == step_branch]
+        med = float(np.median(steps)) if steps.size else float("nan")
+        p95 = float(np.percentile(it, 95))
+        return p95 / med if med and med > 0 else float("nan")
+
+    peak = max(r.peak_blocks for r in pg_runs + [pg_rep])
+    kv_paged = paged.kv_bytes_paged(peak)
+    kv_contig = contig.kv_bytes_contiguous()
+    out = dict(
+        config=dict(arch=arch, slots=slots, prompt_len=prompt_len,
+                    max_prompt=max_prompt, n_requests=n_requests,
+                    block_size=block_size, n_blocks=lay.n_blocks,
+                    prefill_chunk=prefill_chunk, repeats=repeats),
+        token_parity=True,
+        paged=dict(pg_rep.summary(), tok_s_median=round(pg_tok, 2),
+                   **{k: round(v, 4) for k, v in
+                      pg_rep.ttft_percentiles().items()},
+                   stall_factor=round(stall(pg_tl, 3), 2)),
+        contiguous=dict(ct_rep.summary(), tok_s_median=round(ct_tok, 2),
+                        **{k: round(v, 4) for k, v in
+                           ct_rep.ttft_percentiles().items()},
+                        stall_factor=round(stall(ct_tl, 2), 2)),
+        paged_vs_contiguous_tok_s=round(pg_tok / ct_tok, 2) if ct_tok
+        else float("nan"),
+        kv_bytes_paged_peak=kv_paged,
+        kv_bytes_contiguous=kv_contig,
+        kv_reduction=round(kv_contig / kv_paged, 2) if kv_paged
+        else float("nan"),
+    )
+    print(f"# multi-tenant ({arch}, {n_requests} reqs, {slots} slots, "
+          f"P<={prompt_len}): paged {pg_tok:.1f} tok/s vs contiguous "
+          f"{ct_tok:.1f} ({out['paged_vs_contiguous_tok_s']}x), KV "
+          f"{kv_paged / 1024:.0f}KiB peak vs {kv_contig / 1024:.0f}KiB "
+          f"({out['kv_reduction']}x smaller), ttft p95 "
+          f"{out['paged']['ttft_p95_s']}s vs {out['contiguous']['ttft_p95_s']}s,"
+          f" stall {out['paged']['stall_factor']} vs "
+          f"{out['contiguous']['stall_factor']}")
+    return out
+
 
 def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         prompt_len: int = 16, gen: int = 48, repeats: int = 3,
-        draft_k: int = 8, path: str = _BENCH_JSON, gate: bool = False) -> dict:
+        draft_k: int = 8, path: str = _BENCH_JSON, gate: bool = False,
+        multi_tenant: bool = True) -> dict:
     from repro.launch.serve import serve, serve_continuous, serve_speculative
 
     def measure(cim: bool, pack: bool, fuse: bool = True):
@@ -252,6 +469,9 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         continuous_batching=cb,
         speculative=dict(serve_level=serve_level, sweep=sweep),
     )
+    if multi_tenant:
+        result["multi_tenant"] = run_multi_tenant(
+            arch, smoke=smoke, repeats=max(repeats, 3))
     if gate:
         check_regression(result, path)
     with open(path, "w") as f:
@@ -299,12 +519,18 @@ def main():
     ap.add_argument("--check-regression", dest="gate", action="store_true",
                     help="fail if packed decode regressed >10%% vs the "
                          "committed BENCH_serve.json (packed/fp ratio), the "
-                         "speculative speedup fell below its floor, or "
-                         "draft acceptance dropped on the committed sweep "
-                         "point")
+                         "speculative speedup fell below its floor, draft "
+                         "acceptance dropped on the committed sweep point, "
+                         "or the paged KV pool missed its multi-tenant "
+                         "throughput/footprint/stall gates")
+    ap.add_argument("--multi-tenant", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="include the paged-vs-contiguous multi-tenant "
+                         "trace section")
     args = ap.parse_args()
     run(args.arch, args.smoke, args.batch, args.prompt_len, args.gen,
-        args.repeats, args.draft_k, gate=args.gate)
+        args.repeats, args.draft_k, gate=args.gate,
+        multi_tenant=args.multi_tenant)
 
 
 if __name__ == "__main__":

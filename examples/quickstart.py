@@ -117,3 +117,15 @@ spec_tokens, spec = serve_speculative(
 print(f"speculative decode: {spec['decode_speedup_speculative']}x vs "
       f"non-speculative, acceptance {spec['acceptance_rate']:.0%}, "
       "tokens identical")
+
+# --- paged KV serving: block pool, shared prefixes, chunked prefill -------
+# The continuous-batching scheduler can swap its per-slot contiguous KV
+# regions for a global block pool with per-slot block tables (vLLM's
+# layout, allocator folded into the one device-resident serve loop):
+# mixed-length prompts stop paying for the context limit, identical
+# system prompts share refcounted blocks, and long prompts prefill in
+# chunks interleaved with decode so admission never stalls the pool.
+# Tokens are bit-identical to the contiguous scheduler -- see
+# examples/cim_serve.py for a running pool and DESIGN.md §11 for the
+# allocator/pinning/rollback semantics.
+from repro.launch.paging import PagedLayout  # noqa: F401  (see cim_serve.py)

@@ -3,4 +3,4 @@
 # ref.py (pure-jnp oracle)}; validated in interpret mode on CPU.
 # ccim_complex is the fused single-pass complex GEMM (one co-located
 # weight residency -> both Re and Im output tiles, see DESIGN.md §5).
-from . import ccim_complex, ccim_matmul, int8_matmul  # noqa: F401
+from . import ccim_complex, ccim_matmul, int8_matmul, paged_attn  # noqa: F401

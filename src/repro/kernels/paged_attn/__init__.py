@@ -1,0 +1,6 @@
+# Paged-attention decode read path: skinny-M (decode) attention over a
+# block-pooled KV cache, the per-slot block-table gather fused into the
+# attention dot (kernel.py, PrefetchScalarGridSpec) with a pure-jnp
+# gather oracle (ref.py) and a backend-aware dispatcher (ops.py).
+from .ops import paged_attention_decode, paged_gather_kv  # noqa: F401
+from .ref import paged_attention_ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the paged-attention decode read path.
+
+Mirrors ``models.layers.plain_attention`` for an S==1 query batch, with
+the contiguous KV tensor replaced by (block pool, block table) -- gather
+the table into a dense per-row view, then do exactly the plain decode
+attention math (f32 scores, optional tanh softcap, -1e30 masking,
+softmax, bf16 PV).  The Pallas kernel (kernel.py) must match this oracle;
+the XLA fallback IS this oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_gather_kv(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather (n_blocks, bs, H, D) pool rows -> (B, n_tbl*bs, H, D).
+
+    ``table`` is (B, n_tbl) int32 block ids; logical position p of row b
+    lives at pool[table[b, p // bs], p % bs].
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape(nb * bs, *pool.shape[2:])
+    B, n_tbl = table.shape
+    idx = (table[:, :, None] * bs
+           + jnp.arange(bs, dtype=table.dtype)[None, None, :])
+    return jnp.take(flat, idx.reshape(B, n_tbl * bs), axis=0)
+
+
+def paged_attention_ref(
+    q: jax.Array,                 # (B, Hq, Dh)
+    k_pool: jax.Array,            # (n_blocks, bs, Hkv, Dh)
+    v_pool: jax.Array,            # (n_blocks, bs, Hkv, Dh)
+    table: jax.Array,             # (B, n_tbl) int32
+    lengths: jax.Array,           # (B,) int32 valid kv rows (incl. current)
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    is_local=False,               # scalar bool (traced ok)
+) -> jax.Array:
+    """Decode attention over a paged KV cache -> (B, Hq, Dh) f32-accurate
+    output in q's dtype.  Row b's query sits at position lengths[b]-1 and
+    attends k_pos < lengths[b] (ANDed with the sliding window when
+    ``is_local``)."""
+    B, Hq, Dh = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    G = Hq // Hkv
+    L = table.shape[1] * bs
+
+    k = paged_gather_kv(k_pool, table)          # (B, L, Hkv, Dh)
+    v = paged_gather_kv(v_pool, table)
+    qg = q.reshape(B, Hkv, G, Dh) * (Dh ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(L, dtype=jnp.int32)[None, :]
+    q_pos = (lengths - 1)[:, None]
+    msk = k_pos <= q_pos
+    if window is not None:
+        msk_local = msk & (q_pos - k_pos < window)
+        msk = jnp.where(jnp.asarray(is_local), msk_local, msk)
+    s = jnp.where(msk[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, Dh)

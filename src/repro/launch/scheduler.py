@@ -12,24 +12,53 @@ live slots, and a freed slot is refilled from the request queue through
 
 The entire serve loop is DEVICE-RESIDENT.  The request queue (prompts +
 per-request budgets/stop tokens) is staged into device buffers up front,
-and one AOT-compiled ``lax.while_loop`` runs a three-way ``lax.switch``
-until the queue is drained:
+and one AOT-compiled ``lax.while_loop`` runs a ``lax.switch`` until the
+queue is drained:
 
   harvest : some slot finished (EOS or max-new-tokens, tracked by the
             on-device ``live`` mask; finishes are parked in a ``pending``
             mask) -> copy its output row into the per-request result
-            buffer and free the slot.
-  admit   : a slot is free and the queue is non-empty -> reset the slot,
-            batch-1 prefill the next queued prompt into the pool cache
-            (``lm.prefill_into_slot``; the slot index is traced, shapes
-            are static), sample the request's first token, arm its
-            counters.
+            buffer and free the slot (paged mode: decrement its blocks'
+            refcounts and point its table at the trash block).
+  admit   : a slot is free and the queue head is admissible -> reset the
+            slot and arm it.  Contiguous mode prefills the whole prompt
+            here (``lm.prefill_into_slot``); paged mode only ALLOCATES
+            (grab blocks off the device free list, copy the shared-prefix
+            chain from the donor's recorded table, place pin refcounts)
+            and marks the slot ``filling`` -- the prompt itself streams in
+            through the prefill branch.
+  prefill : (paged only) advance ONE filling slot by one
+            ``prefill_chunk``-token chunk (``lm.prefill_chunk_into_slot``).
+            Chunked admission interleaves with decode steps, so a long
+            prompt can no longer stall the whole pool for its full
+            prefill; the final chunk samples the request's first token.
   step    : one pooled decode step; only live slots advance.
 
 The host syncs with the device exactly ONCE per workload -- there is no
 per-token (or even per-request) host round-trip, which is what lets the
 scheduler's fewer-wasted-slot-steps advantage survive dispatch latency
-even at smoke scale on CPU.
+even at smoke scale on CPU.  (``run_instrumented`` deliberately trades
+that away: it drives the SAME compiled iteration body one switch at a
+time to put a host timestamp on every iteration -- TTFT and per-step
+latency percentiles for the serve benchmark -- while ``run`` keeps the
+pure loop for throughput numbers.)
+
+PAGED mode (``paged=PagedLayout(...)``) replaces the per-slot contiguous
+``max_seq`` KV regions with global per-layer block pools and per-slot
+block tables (lm.init_paged_cache).  The allocator lives INSIDE the loop:
+a ``(n_blocks,)`` refcount vector doubles as the free list (free <=>
+ref==0; an argsort puts free blocks first in id order), admission grants
+``max_blk`` blocks eagerly (prompt span + decode budget + speculative
+headroom -- no mid-flight growth, so admission is the only place that can
+run out), and harvest decrements.  Shared prompt prefixes are planned on
+the host (paging.plan_prefix_sharing): a sharer copies the donor's
+leading table entries instead of recomputing them, donors carry pin
+refcounts for every chain that passes through their blocks, and the
+refcount algebra returns every block to zero when the queue drains.
+Tokens are BIT-IDENTICAL to the contiguous scheduler (and to a solo run):
+the attention validity horizon does not care where KV rows physically
+live, and the chunked/shared prefill paths recompute exactly the rows
+whose values the single-shot path would have produced.
 
 Determinism contract (tested in tests/test_scheduler.py): a request's
 tokens depend only on (params, prompt, rid) -- NOT on which slot it ran
@@ -52,7 +81,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +89,7 @@ import numpy as np
 
 from ..models import lm
 from ..models.config import ModelConfig
+from .paging import PagedLayout, cdiv, contiguous_kv_bytes, plan_prefix_sharing
 
 
 def sampling_key(seed: int) -> jax.Array:
@@ -86,6 +116,8 @@ class FinishedRequest:
     tokens: np.ndarray            # (n,) generated tokens, stop token incl.
     latency_s: float              # arrival (run start) -> completion
     finish_iter: int              # loop iteration the request finished at
+    first_iter: int = 0           # loop iteration its first token appeared
+    ttft_s: float = float("nan")  # measured only by run_instrumented
 
 
 @dataclasses.dataclass
@@ -97,6 +129,8 @@ class ServeReport:
     slots: int
     n_drafted: int = 0            # draft tokens proposed (speculative mode)
     n_accepted: int = 0           # draft tokens accepted by verify
+    n_pf: int = 0                 # chunked-prefill iterations (paged mode)
+    peak_blocks: int = 0          # peak live pool blocks (paged mode)
 
     @property
     def total_tokens(self) -> int:
@@ -123,7 +157,7 @@ class ServeReport:
     def occupancy(self) -> float:
         """Useful-token fraction of the slot-steps spent (admits each
         yield one token; every pooled step spends ``slots`` slot-steps)."""
-        slot_steps = self.slots * self.n_steps + self.n_admits
+        slot_steps = self.slots * self.n_steps + self.n_admits + self.n_pf
         return self.total_tokens / slot_steps if slot_steps else float("nan")
 
     def latency_percentiles(self) -> Dict[str, float]:
@@ -132,6 +166,17 @@ class ServeReport:
             return {"p50_s": float("nan"), "p95_s": float("nan")}
         pick = lambda q: lats[min(len(lats) - 1, int(q * (len(lats) - 1) + 0.5))]
         return {"p50_s": pick(0.50), "p95_s": pick(0.95)}
+
+    def ttft_percentiles(self) -> Dict[str, float]:
+        """Time-to-first-token percentiles; NaN unless the report came
+        from ``run_instrumented`` (the pure device loop has no per-event
+        clock to read without paying the sync it removes)."""
+        ts = sorted(f.ttft_s for f in self.finished
+                    if not np.isnan(f.ttft_s))
+        if not ts:
+            return {"ttft_p50_s": float("nan"), "ttft_p95_s": float("nan")}
+        pick = lambda q: ts[min(len(ts) - 1, int(q * (len(ts) - 1) + 0.5))]
+        return {"ttft_p50_s": pick(0.50), "ttft_p95_s": pick(0.95)}
 
     def summary(self) -> Dict:
         out = dict(total_tokens=self.total_tokens,
@@ -147,6 +192,8 @@ class ServeReport:
                        n_accepted=self.n_accepted,
                        acceptance_rate=round(self.acceptance_rate, 4),
                        tokens_per_step=round(self.tokens_per_step, 4))
+        if self.n_pf or self.peak_blocks:
+            out.update(n_pf=self.n_pf, peak_blocks=self.peak_blocks)
         return out
 
     def tokens_by_rid(self) -> Dict[int, np.ndarray]:
@@ -157,6 +204,12 @@ def _i32(v) -> jax.Array:
     return jnp.asarray(v, jnp.int32)
 
 
+# q_meta column layout (one row per staged request):
+#   0 rid  1 max_new  2 stop  3 prompt_len  4 share_src  5 n_shared_blocks
+#   6 arrival_iter  7 max_blk
+_QM_COLS = 8
+
+
 class ContinuousBatchingScheduler:
     """Fixed-slot continuous batching, fully device-resident.
 
@@ -164,16 +217,26 @@ class ContinuousBatchingScheduler:
     scheduler never touches weights, so pack-once/serve-many carries
     straight through.  ``max_new_cap`` bounds every request's
     max_new_tokens and sizes the on-device output buffers; ``prompt_len``
-    is the single static prompt length (shorter prompts must be padded by
-    the caller -- static shapes are what keep the whole pool on a handful
-    of compiled executables).
+    is the static MAXIMUM prompt length (contiguous mode: also the exact
+    length -- shorter prompts must be padded by the caller; paged mode:
+    shorter prompts are fine, the scheduler pads the staging buffer and
+    tracks true lengths per request).
 
     Request latencies are exact at the workload level (one wall clock
     around the device loop) and attributed per request by its finish
     iteration: latency_i = wall * finish_iter_i / total_iters.  This is an
     estimate -- admit iterations cost more than step iterations -- but the
     loop never leaves the device, so there is no per-event host timestamp
-    to read without paying the sync the design removes.
+    to read without paying the sync the design removes.  Use
+    ``run_instrumented`` when you need real TTFT / per-iteration numbers.
+
+    ``paged=PagedLayout(...)`` switches the KV cache to the global block
+    pool + per-slot table layout with on-device alloc/free, host-planned
+    shared-prefix reuse (``prefix_sharing``, attention families only --
+    SSM/conv recurrent state is not positional and cannot be shared) and
+    chunked prefill (``prefill_chunk`` tokens per scheduler iteration,
+    default: whole prompt in one chunk).  Paged tokens are bit-identical
+    to contiguous-mode tokens.
 
     ``draft_k > 0`` turns on plan-cascade speculative decoding: each step
     branch becomes one atomic draft-K/verify/accept ROUND (see
@@ -187,11 +250,24 @@ class ContinuousBatchingScheduler:
     distribution-identical (rejection sampling) and stays pool-vs-solo
     bit-identical at EQUAL draft_k.  Restricted to positional-KV families
     (attention); SSM/conv recurrences cannot roll back a rejected block.
+
+    ``adaptive_draft_k=True`` feeds the measured acceptance rate (an EMA
+    over spec rounds) back into the next round's draft depth over the
+    rung ladder {K, K/2, K/4}: high acceptance keeps deep drafts, low
+    acceptance stops paying for blocks the verifier rejects.  Greedy
+    tokens are invariant to the rung (accept-longest-prefix + correction
+    reproduces the argmax chain at any K); temperature sampling stays
+    distribution-correct but the pool-vs-solo bit-equality holds only at
+    FIXED draft_k (the rung schedule depends on poolmates' acceptance).
     """
 
     def __init__(self, params, cfg: ModelConfig, slots: int, prompt_len: int,
                  max_new_cap: int, temperature: float = 0.0, seed: int = 0,
-                 pad_token: int = 0, draft_k: int = 0, draft_plan=None):
+                 pad_token: int = 0, draft_k: int = 0, draft_plan=None,
+                 paged: Optional[PagedLayout] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_sharing: bool = True,
+                 adaptive_draft_k: bool = False):
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "scheduler is text-only for now (no per-request frontends)")
@@ -203,6 +279,8 @@ class ContinuousBatchingScheduler:
         if draft_k < 0 or draft_k > 31:
             raise ValueError(f"draft_k {draft_k} outside [0, 31] (k+1 must "
                              "stay on the skinny-M verify path)")
+        if adaptive_draft_k and not draft_k:
+            raise ValueError("adaptive_draft_k needs draft_k > 0")
         self.cfg, self.slots = cfg, slots
         self.prompt_len, self.cap = prompt_len, max_new_cap
         self.temperature, self.pad_token = temperature, pad_token
@@ -212,9 +290,39 @@ class ContinuousBatchingScheduler:
         self.max_seq = prompt_len + max_new_cap + draft_k
         self._params = params
         self.draft_k = draft_k
+        self.adaptive_draft_k = adaptive_draft_k
+        rungs: List[int] = []
+        for k in (draft_k, draft_k // 2, draft_k // 4):
+            k = max(1, k)
+            if k not in rungs:
+                rungs.append(k)
+        self._rungs = rungs if adaptive_draft_k else [draft_k]
         self.draft_cfg = (dataclasses.replace(cfg, cim_plan=draft_plan)
                           if draft_plan is not None else cfg)
+
+        self.paged = paged
+        self.prefix_sharing = prefix_sharing
+        if paged is not None:
+            C = prefill_chunk if prefill_chunk is not None else prompt_len
+            if not (1 <= C <= prompt_len):
+                raise ValueError(f"prefill_chunk {C} outside [1, {prompt_len}]")
+            if paged.n_tbl >= paged.n_blocks:
+                raise ValueError(
+                    f"table width {paged.n_tbl} >= pool size {paged.n_blocks}"
+                    " (one slot could hold more blocks than exist)")
+            self.prefill_chunk = C
+            self._p_pad = cdiv(prompt_len, C) * C
+            need = max(self._p_pad, prompt_len + max_new_cap - 1 + draft_k)
+            if paged.tokens_per_slot < need:
+                raise ValueError(
+                    f"paged layout addresses {paged.tokens_per_slot} tokens "
+                    f"per slot < worst-case need {need} (prompt span + "
+                    "decode budget + draft headroom)")
+        else:
+            self.prefill_chunk = prompt_len
+            self._p_pad = prompt_len
         self._loops: Dict[int, object] = {}    # queue length -> executable
+        self._iters: Dict[int, object] = {}    # queue length -> one-iter exe
 
         def sample(logits, keys):
             """logits (R, V) f32, keys (R, 2) -> (R,) int32 tokens."""
@@ -264,7 +372,7 @@ class ContinuousBatchingScheduler:
                         n_gen=n_gen, keys=keys, live=live & ~finished,
                         pending=st["pending"] | finished)
 
-        def spec_step(params, st):
+        def spec_step(params, st, K: int):
             """One speculative ROUND as a single pooled step: draft K
             tokens under the draft-plan config (same packed weights), roll
             the per-slot positions back, verify all K+1 positions in ONE
@@ -280,8 +388,12 @@ class ContinuousBatchingScheduler:
             validity horizon masks until pos is advanced past them -- so
             "rolling back" a rejected suffix is just not advancing pos
             over it, and the next round's writes overwrite those rows.
+            Paged caches change NOTHING here: the table is untouched
+            mid-round (admission pre-allocated ``draft_k`` rows of
+            headroom), so rollback never frees or re-allocates a block,
+            and non-live slots' draft/verify writes are redirected to the
+            trash block (they may alias shared or mid-prefill blocks).
             """
-            K = self.draft_k
             live = st["live"]
             pos0 = st["cache"]["pos"]
             cache, keys, last = st["cache"], st["keys"], st["last_tok"]
@@ -300,7 +412,8 @@ class ContinuousBatchingScheduler:
             drafts = jnp.stack(d_toks, axis=1)                  # (B, K)
             vtoks = jnp.concatenate([st["last_tok"], drafts], axis=1)
             cache = dict(cache, pos=pos0)   # rollback before verify
-            vlogits, cache = lm.verify_step(params, cfg, vtoks, cache)
+            vlogits, cache = lm.verify_step(params, cfg, vtoks, cache,
+                                            live=live)
 
             # verify position i gives the distribution of the token AFTER
             # prefix [last, d_1..d_i]; cand pads drafts to K+1 columns so
@@ -379,9 +492,29 @@ class ContinuousBatchingScheduler:
             return (st, jnp.sum(jnp.where(live, K, 0)).astype(jnp.int32),
                     jnp.sum(jnp.where(live, n_acc, 0)).astype(jnp.int32))
 
+        self._sample = sample
         self._arm_slot, self._step_fn = arm_slot, step
         self._spec_step = spec_step
         self._lockstep_exes = None
+
+    # -- KV footprint accounting ---------------------------------------
+
+    def kv_bytes_contiguous(self, dtype_bytes: int = 2) -> int:
+        """KV bytes the contiguous layout would hold resident for this
+        pool (slots * max_seq regions) -- the baseline the paged pool's
+        peak-block footprint is compared against."""
+        return contiguous_kv_bytes(self.cfg, self.slots, self.max_seq,
+                                   dtype_bytes=dtype_bytes)
+
+    def kv_bytes_paged(self, n_blocks: Optional[int] = None,
+                       dtype_bytes: int = 2) -> int:
+        """KV bytes of ``n_blocks`` pool blocks (default: the whole
+        pool).  Pass a report's ``peak_blocks`` for the peak-resident
+        number the serve benchmark gates on."""
+        if self.paged is None:
+            raise ValueError("kv_bytes_paged on a contiguous scheduler")
+        return self.paged.kv_bytes(self.cfg, n_blocks=n_blocks,
+                                   dtype_bytes=dtype_bytes)
 
     def _lockstep_executables(self):
         """Lock-step baseline executables: batch-1 admit + drain-N-steps
@@ -404,84 +537,273 @@ class ContinuousBatchingScheduler:
 
     # -- device-resident serve loop ------------------------------------
 
+    def _occupied(self, st):
+        occ = st["live"] | st["pending"]
+        if self.paged is not None:
+            occ = occ | st["filling"]
+        return occ
+
+    def _step_once(self, params, c, q_toks, q_meta, q_pins, n_queue: int):
+        """ONE scheduler iteration: pick a branch, run it, bump n_iter.
+        The while_loop body (``_build_loop``) and the host-stepped
+        instrumented runner (``run_instrumented``) share this function,
+        so instrumenting never measures a different program.  Returns
+        (carry, branch, continue?)."""
+        cfg, paged = self.cfg, self.paged
+
+        def harvest(c):
+            st = c["st"]
+            slot = jnp.argmax(st["pending"])
+            qidx = st["occupant"][slot]
+            c = dict(c)
+            c["res_out"] = c["res_out"].at[qidx].set(st["out"][slot])
+            c["res_n"] = c["res_n"].at[qidx].set(st["n_gen"][slot])
+            c["res_iter"] = c["res_iter"].at[qidx].set(c["n_iter"])
+            st = dict(st, pending=st["pending"].at[slot].set(False))
+            if paged is not None:
+                # free the slot's grant: one ref off each of its first
+                # n_alloc table entries (shared entries included -- the
+                # donor pinned one ref per chain through them), then park
+                # the table on the trash block
+                tbl_row = st["cache"]["table"][slot]
+                j = jnp.arange(paged.n_tbl, dtype=jnp.int32)
+                tgt = jnp.where(j < st["n_alloc"][slot], tbl_row,
+                                paged.n_blocks)
+                st["ref"] = st["ref"].at[tgt].add(-1, mode="drop")
+                st["n_alloc"] = st["n_alloc"].at[slot].set(0)
+                st["cache"] = dict(st["cache"],
+                                   table=st["cache"]["table"].at[slot].set(0))
+            c["st"] = st
+            return c
+
+        def admit_contiguous(c):
+            st, qidx = c["st"], c["q_head"]
+            slot = jnp.argmin(self._occupied(st))
+            prompt = jax.lax.dynamic_slice(q_toks, (qidx, 0),
+                                           (1, self.prompt_len))
+            rid, max_new, stop = (q_meta[qidx, 0], q_meta[qidx, 1],
+                                  q_meta[qidx, 2])
+            st = self._arm_slot(params, st, slot, prompt, rid, max_new,
+                                stop)
+            st = dict(st, occupant=st["occupant"].at[slot].set(qidx))
+            return dict(c, st=st, q_head=qidx + 1,
+                        n_admits=c["n_admits"] + 1,
+                        res_first=c["res_first"].at[qidx].set(c["n_iter"]))
+
+        def admit_paged(c):
+            """Grant blocks + arm the slot; the prompt streams in through
+            the prefill branch.  The free list is the refcount vector
+            itself: argsort(free-first, by id) makes the grant
+            deterministic, and the admission gate already guaranteed
+            enough zeros exist."""
+            st, qidx = c["st"], c["q_head"]
+            bs, n_tbl, NB = paged.block_size, paged.n_tbl, paged.n_blocks
+            slot = jnp.argmin(self._occupied(st))
+            rid, max_new, stop = (q_meta[qidx, 0], q_meta[qidx, 1],
+                                  q_meta[qidx, 2])
+            src = jnp.clip(q_meta[qidx, 4], 0, n_queue - 1)
+            n_sh, max_blk = q_meta[qidx, 5], q_meta[qidx, 7]
+            pins = q_pins[qidx]                              # (n_tbl,)
+            ar_nb = jnp.arange(NB, dtype=jnp.int32)
+            order = jnp.argsort(
+                jnp.where(st["ref"] == 0, ar_nb, NB + ar_nb)).astype(jnp.int32)
+            j = jnp.arange(n_tbl, dtype=jnp.int32)
+            fresh = order[jnp.clip(j - n_sh, 0, NB - 1)]
+            shared = c["req_tables"][src]
+            tbl_row = jnp.where(
+                j < n_sh, shared,
+                jnp.where(j < max_blk, fresh, 0)).astype(jnp.int32)
+            # fresh blocks come up at ref 1 (+ pins for later chains that
+            # pass through them); shared blocks were pre-pinned by their
+            # materializer, so the sharer adds nothing here
+            is_fresh = (j >= n_sh) & (j < max_blk)
+            tgt = jnp.where(is_fresh, tbl_row, NB)
+            ref = st["ref"].at[tgt].add(
+                jnp.where(is_fresh, 1 + pins, 0), mode="drop")
+            used = jnp.sum((ref > 0).astype(jnp.int32)) - 1  # - trash pin
+            cache = lm.reset_slot(st["cache"], slot)
+            # a sharer starts its chunk walk at the last chunk boundary
+            # inside the shared region: the few recomputed rows write
+            # values bit-identical to what the donor already materialized
+            s0 = (n_sh * bs) // self.prefill_chunk * self.prefill_chunk
+            cache = dict(cache,
+                         table=cache["table"].at[slot].set(tbl_row),
+                         pos=cache["pos"].at[slot].set(s0))
+            k0 = jax.random.fold_in(self._base_key, rid)
+            st = dict(st, cache=cache, ref=ref,
+                      filling=st["filling"].at[slot].set(True),
+                      live=st["live"].at[slot].set(False),
+                      pending=st["pending"].at[slot].set(False),
+                      n_gen=st["n_gen"].at[slot].set(0),
+                      max_new=st["max_new"].at[slot].set(max_new),
+                      stop=st["stop"].at[slot].set(stop),
+                      out=st["out"].at[slot].set(self.pad_token),
+                      keys=st["keys"].at[slot].set(k0),
+                      occupant=st["occupant"].at[slot].set(qidx),
+                      n_alloc=st["n_alloc"].at[slot].set(max_blk))
+            return dict(c, st=st, q_head=qidx + 1,
+                        n_admits=c["n_admits"] + 1,
+                        req_tables=c["req_tables"].at[qidx].set(tbl_row),
+                        peak_blocks=jnp.maximum(c["peak_blocks"], used))
+
+        def prefill_chunk(c):
+            """Advance the first filling slot by one chunk; the final
+            chunk samples the first token exactly as arm_slot would
+            (same key split, same logits row) and flips the slot live."""
+            st = c["st"]
+            C = self.prefill_chunk
+            slot = jnp.argmax(st["filling"])
+            qidx = st["occupant"][slot]
+            plen = q_meta[qidx, 3]
+            start = st["cache"]["pos"][slot]
+            chunk = jax.lax.dynamic_slice(q_toks, (qidx, start), (1, C))
+            logits, cache = lm.prefill_chunk_into_slot(
+                params, cfg, chunk, st["cache"], slot)
+            done = (start + C) >= plen
+            row = jnp.clip(plen - 1 - start, 0, C - 1)
+            lg = jax.lax.dynamic_slice(
+                logits, (0, row, 0), (1, 1, logits.shape[-1]))[:, 0]
+            k_next, k_use = jax.random.split(st["keys"][slot])
+            tok = self._sample(lg, k_use[None])[0]
+            fin0 = (tok == st["stop"][slot]) | (st["max_new"][slot] <= 1)
+            # the final chunk ran to the padded span; commit pos = plen so
+            # decode writes land right after the true prompt (the span's
+            # padding rows sit beyond the validity horizon until decode
+            # overwrites them)
+            pos_new = jnp.where(done, plen, start + C)
+            cache = dict(cache, pos=cache["pos"].at[slot].set(pos_new))
+            st = dict(
+                st, cache=cache,
+                last_tok=st["last_tok"].at[slot, 0].set(
+                    jnp.where(done, tok, st["last_tok"][slot, 0])),
+                out=st["out"].at[slot, 0].set(
+                    jnp.where(done, tok, st["out"][slot, 0])),
+                n_gen=st["n_gen"].at[slot].set(
+                    jnp.where(done, 1, 0)),
+                keys=st["keys"].at[slot].set(
+                    jnp.where(done, k_next, st["keys"][slot])),
+                live=st["live"].at[slot].set(done & ~fin0),
+                pending=st["pending"].at[slot].set(done & fin0),
+                filling=st["filling"].at[slot].set(~done))
+            return dict(c, st=st, last_pf=jnp.bool_(True),
+                        n_pf=c["n_pf"] + 1,
+                        pf_done=c["pf_done"].at[qidx].set(
+                            c["pf_done"][qidx] | done),
+                        res_first=c["res_first"].at[qidx].set(
+                            jnp.where(done, c["n_iter"],
+                                      c["res_first"][qidx])))
+
+        def step(c):
+            upd = (dict(last_pf=jnp.bool_(False)) if paged is not None
+                   else {})
+            if self.draft_k:
+                if len(self._rungs) > 1:
+                    ema = c["acc_ema"]
+                    R = len(self._rungs)
+                    idx = jnp.where(ema > 0.8, 0,
+                                    jnp.where(ema > 0.4, min(1, R - 1),
+                                              R - 1))
+                    st, drafted, accepted = jax.lax.switch(
+                        idx,
+                        [lambda s, k=k: self._spec_step(params, s, k)
+                         for k in self._rungs],
+                        c["st"])
+                else:
+                    st, drafted, accepted = self._spec_step(
+                        params, c["st"], self.draft_k)
+                rate = (accepted.astype(jnp.float32)
+                        / jnp.maximum(drafted, 1).astype(jnp.float32))
+                ema = jnp.where(drafted > 0,
+                                0.8 * c["acc_ema"] + 0.2 * rate,
+                                c["acc_ema"])
+                return dict(c, st=st, n_steps=c["n_steps"] + 1,
+                            n_drafted=c["n_drafted"] + drafted,
+                            n_accepted=c["n_accepted"] + accepted,
+                            acc_ema=ema, **upd)
+            return dict(c, st=self._step_fn(params, c["st"]),
+                        n_steps=c["n_steps"] + 1, **upd)
+
+        st = c["st"]
+        qh = jnp.minimum(c["q_head"], n_queue - 1)
+        arrived = q_meta[qh, 6] <= c["n_iter"]
+        can_admit = ((c["q_head"] < n_queue)
+                     & ~jnp.all(self._occupied(st)) & arrived)
+        if paged is not None:
+            n_sh = q_meta[qh, 5]
+            src = jnp.clip(q_meta[qh, 4], 0, n_queue - 1)
+            free_cnt = jnp.sum((st["ref"] == 0).astype(jnp.int32))
+            can_admit &= (n_sh == 0) | c["pf_done"][src]
+            can_admit &= free_cnt >= (q_meta[qh, 7] - n_sh)
+            # prefill/step alternation: a filling slot always progresses,
+            # but never starves live decoders for more than one iteration
+            want_pf = (jnp.any(st["filling"])
+                       & (~jnp.any(st["live"]) | ~c["last_pf"]))
+            branch = jnp.where(
+                jnp.any(st["pending"]), 0,
+                jnp.where(can_admit, 1, jnp.where(want_pf, 2, 3)))
+            c = jax.lax.switch(branch,
+                               [harvest, admit_paged, prefill_chunk, step], c)
+        else:
+            branch = jnp.where(jnp.any(st["pending"]), 0,
+                               jnp.where(can_admit, 1, 2))
+            c = jax.lax.switch(branch, [harvest, admit_contiguous, step], c)
+        c = dict(c, n_iter=c["n_iter"] + 1)
+        cont = jnp.any(self._occupied(c["st"])) | (c["q_head"] < n_queue)
+        return c, branch, cont
+
     def _build_loop(self, n_queue: int):
         """Compile the whole-workload loop for a queue of n_queue requests."""
-        cfg, slots, cap, P = self.cfg, self.slots, self.cap, self.prompt_len
-
-        def serve_loop(params, st, q_toks, q_meta):
-            # q_toks (N, P) int32; q_meta (N, 3) int32: rid, max_new, stop
-            def occupied(st):
-                return st["live"] | st["pending"]
-
-            def harvest(c):
-                st = c["st"]
-                slot = jnp.argmax(st["pending"])
-                qidx = st["occupant"][slot]
-                c = dict(c)
-                c["res_out"] = c["res_out"].at[qidx].set(st["out"][slot])
-                c["res_n"] = c["res_n"].at[qidx].set(st["n_gen"][slot])
-                c["res_iter"] = c["res_iter"].at[qidx].set(c["n_iter"])
-                c["st"] = dict(st, pending=st["pending"].at[slot].set(False))
-                return c
-
-            def admit(c):
-                st, qidx = c["st"], c["q_head"]
-                slot = jnp.argmin(occupied(st))
-                prompt = jax.lax.dynamic_slice(q_toks, (qidx, 0), (1, P))
-                rid, max_new, stop = (q_meta[qidx, 0], q_meta[qidx, 1],
-                                      q_meta[qidx, 2])
-                st = self._arm_slot(params, st, slot, prompt, rid, max_new,
-                                    stop)
-                st = dict(st, occupant=st["occupant"].at[slot].set(qidx))
-                return dict(c, st=st, q_head=qidx + 1,
-                            n_admits=c["n_admits"] + 1)
-
-            def step(c):
-                if self.draft_k:
-                    st, drafted, accepted = self._spec_step(params, c["st"])
-                    return dict(c, st=st, n_steps=c["n_steps"] + 1,
-                                n_drafted=c["n_drafted"] + drafted,
-                                n_accepted=c["n_accepted"] + accepted)
-                return dict(c, st=self._step_fn(params, c["st"]),
-                            n_steps=c["n_steps"] + 1)
-
+        def serve_loop(params, carry, q_toks, q_meta, q_pins):
             def body(c):
-                st = c["st"]
-                can_admit = (c["q_head"] < n_queue) & ~jnp.all(occupied(st))
-                branch = jnp.where(jnp.any(st["pending"]), 0,
-                                   jnp.where(can_admit, 1, 2))
-                c = jax.lax.switch(branch, [harvest, admit, step], c)
-                return dict(c, n_iter=c["n_iter"] + 1)
+                return self._step_once(params, c, q_toks, q_meta, q_pins,
+                                       n_queue)[0]
 
             def cond(c):
-                return (jnp.any(occupied(c["st"]))
+                return (jnp.any(self._occupied(c["st"]))
                         | (c["q_head"] < n_queue))
 
-            carry = dict(
-                st=st, q_head=_i32(0), n_iter=_i32(0), n_steps=_i32(0),
-                n_admits=_i32(0), n_drafted=_i32(0), n_accepted=_i32(0),
-                res_out=jnp.full((n_queue, cap), self.pad_token, jnp.int32),
-                res_n=jnp.zeros((n_queue,), jnp.int32),
-                res_iter=jnp.zeros((n_queue,), jnp.int32),
-            )
             c = jax.lax.while_loop(cond, body, carry)
-            return dict(res_out=c["res_out"], res_n=c["res_n"],
-                        res_iter=c["res_iter"], n_iter=c["n_iter"],
-                        n_steps=c["n_steps"], n_admits=c["n_admits"],
-                        n_drafted=c["n_drafted"], n_accepted=c["n_accepted"])
+            out = dict(res_out=c["res_out"], res_n=c["res_n"],
+                       res_iter=c["res_iter"], res_first=c["res_first"],
+                       n_iter=c["n_iter"], n_steps=c["n_steps"],
+                       n_admits=c["n_admits"], n_drafted=c["n_drafted"],
+                       n_accepted=c["n_accepted"])
+            if self.paged is not None:
+                out.update(n_pf=c["n_pf"], peak_blocks=c["peak_blocks"])
+            return out
 
         # no donation: the loop's outputs are only the result buffers, so
         # the input state can't alias anything (XLA would warn and ignore)
-        state = self._init_state()
-        qt = _i32(np.zeros((n_queue, P)))
-        qm = _i32(np.zeros((n_queue, 3)))
+        carry = self._init_carry(n_queue)
+        qt = _i32(np.zeros((n_queue, self._p_pad)))
+        qm = _i32(np.zeros((n_queue, _QM_COLS)))
+        qp = _i32(np.zeros((n_queue, self._n_pin_cols())))
         return (jax.jit(serve_loop)
-                .lower(self._params, state, qt, qm).compile())
+                .lower(self._params, carry, qt, qm, qp).compile())
+
+    def _build_iter(self, n_queue: int):
+        """Compile ONE scheduler iteration (the switch) for the
+        instrumented runner.  The carry is donated: the host steps the
+        loop, so the pool state round-trips through this executable every
+        iteration."""
+        def one(params, carry, q_toks, q_meta, q_pins):
+            c, branch, cont = self._step_once(params, carry, q_toks,
+                                              q_meta, q_pins, n_queue)
+            return c, branch, cont
+
+        carry = self._init_carry(n_queue)
+        qt = _i32(np.zeros((n_queue, self._p_pad)))
+        qm = _i32(np.zeros((n_queue, _QM_COLS)))
+        qp = _i32(np.zeros((n_queue, self._n_pin_cols())))
+        return (jax.jit(one, donate_argnums=(1,))
+                .lower(self._params, carry, qt, qm, qp).compile())
+
+    def _n_pin_cols(self) -> int:
+        return self.paged.n_tbl if self.paged is not None else 1
 
     def _init_state(self) -> Dict:
         B, cap = self.slots, self.cap
-        return dict(
-            cache=lm.init_cache(self.cfg, B, self.max_seq),
+        st = dict(
             last_tok=jnp.full((B, 1), self.pad_token, jnp.int32),
             live=jnp.zeros((B,), jnp.bool_),
             n_gen=jnp.zeros((B,), jnp.int32),
@@ -492,54 +814,215 @@ class ContinuousBatchingScheduler:
             pending=jnp.zeros((B,), jnp.bool_),
             occupant=jnp.zeros((B,), jnp.int32),
         )
+        if self.paged is not None:
+            lay = self.paged
+            st["cache"] = lm.init_paged_cache(
+                self.cfg, B, lay.n_blocks, lay.block_size, lay.n_tbl)
+            st["ref"] = jnp.zeros((lay.n_blocks,), jnp.int32).at[0].set(1)
+            st["filling"] = jnp.zeros((B,), jnp.bool_)
+            st["n_alloc"] = jnp.zeros((B,), jnp.int32)
+        else:
+            st["cache"] = lm.init_cache(self.cfg, B, self.max_seq)
+        return st
+
+    def _init_carry(self, n_queue: int) -> Dict:
+        carry = dict(
+            st=self._init_state(), q_head=_i32(0), n_iter=_i32(0),
+            n_steps=_i32(0), n_admits=_i32(0), n_drafted=_i32(0),
+            n_accepted=_i32(0), acc_ema=jnp.float32(1.0),
+            res_out=jnp.full((n_queue, self.cap), self.pad_token, jnp.int32),
+            res_n=jnp.zeros((n_queue,), jnp.int32),
+            res_iter=jnp.zeros((n_queue,), jnp.int32),
+            res_first=jnp.zeros((n_queue,), jnp.int32),
+        )
+        if self.paged is not None:
+            carry.update(
+                last_pf=jnp.bool_(False), n_pf=_i32(0),
+                peak_blocks=_i32(0),
+                pf_done=jnp.zeros((n_queue,), jnp.bool_),
+                req_tables=jnp.zeros((n_queue, self.paged.n_tbl),
+                                     jnp.int32))
+        return carry
+
+    # -- host-side staging ---------------------------------------------
 
     def _check(self, requests: Sequence[Request]):
         for r in requests:
-            if len(r.prompt) != self.prompt_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt len {len(r.prompt)} != "
-                    f"scheduler prompt_len {self.prompt_len}")
             if r.max_new_tokens > self.cap:
                 raise ValueError(
                     f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
                     f"> cap {self.cap}")
+            if self.paged is not None:
+                plen = len(r.prompt)
+                if not (1 <= plen <= self.prompt_len):
+                    raise ValueError(
+                        f"request {r.rid}: prompt len {plen} outside "
+                        f"[1, {self.prompt_len}]")
+                if (self.cfg.family in ("ssm", "hybrid")
+                        and plen % self.prefill_chunk):
+                    raise ValueError(
+                        f"request {r.rid}: prompt len {plen} must be a "
+                        f"multiple of prefill_chunk {self.prefill_chunk} "
+                        f"for the {self.cfg.family!r} family (a garbage "
+                        "chunk tail would corrupt the recurrent state)")
+                need = max(cdiv(plen, self.prefill_chunk)
+                           * self.prefill_chunk,
+                           plen + r.max_new_tokens - 1 + self.draft_k)
+                if need > self.paged.tokens_per_slot:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} addressable tokens"
+                        f" > table capacity {self.paged.tokens_per_slot}")
+            elif len(r.prompt) != self.prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt len {len(r.prompt)} != "
+                    f"scheduler prompt_len {self.prompt_len}")
         if len({r.rid for r in requests}) != len(requests):
             raise ValueError("request rids must be unique within a run")
 
-    def compile_for(self, n_requests: int, lockstep: bool = False):
+    def _stage(self, requests: Sequence[Request],
+               arrival_iters: Optional[Sequence[int]] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Stage the workload into the (q_toks, q_meta, q_pins) device
+        buffers, resolving prefix sharing and per-request block grants."""
+        n = len(requests)
+        toks = np.full((n, self._p_pad), self.pad_token, np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :len(r.prompt)] = np.asarray(r.prompt, np.int32)
+        arr = (np.zeros(n, np.int64) if arrival_iters is None
+               else np.asarray(arrival_iters, np.int64))
+        if arrival_iters is not None and len(arr) != n:
+            raise ValueError("arrival_iters length != len(requests)")
+        meta = np.zeros((n, _QM_COLS), np.int64)
+        if self.paged is not None:
+            lay, C = self.paged, self.prefill_chunk
+            enable = (self.prefix_sharing
+                      and self.cfg.family not in ("ssm", "hybrid"))
+            plan = plan_prefix_sharing(
+                [np.asarray(r.prompt) for r in requests],
+                lay.block_size, lay.n_tbl, enable=enable)
+            pins = plan.pin_counts.astype(np.int64)
+            max_blks = np.zeros(n, np.int64)
+            for i, r in enumerate(requests):
+                plen = len(r.prompt)
+                need = max(cdiv(plen, C) * C,
+                           plen + r.max_new_tokens - 1 + self.draft_k)
+                max_blks[i] = lay.blocks_for(need)
+            # static no-deadlock guarantee: even with every pinned shared
+            # block held live by a not-yet-admitted sharer, the pool can
+            # satisfy the largest single fresh grant
+            n_pinned = int(np.sum(plan.pin_counts > 0))
+            worst = int(np.max(max_blks - plan.n_shared_blocks, initial=0))
+            if worst + n_pinned > lay.n_blocks - 1:
+                raise ValueError(
+                    f"paged pool too small: worst-case fresh grant {worst}"
+                    f" + {n_pinned} pinned shared blocks > "
+                    f"{lay.n_blocks - 1} allocatable blocks")
+            for i, r in enumerate(requests):
+                meta[i] = [r.rid, r.max_new_tokens, r.stop_token,
+                           len(r.prompt), plan.share_src[i],
+                           plan.n_shared_blocks[i], arr[i], max_blks[i]]
+        else:
+            pins = np.zeros((n, 1), np.int64)
+            for i, r in enumerate(requests):
+                meta[i] = [r.rid, r.max_new_tokens, r.stop_token,
+                           len(r.prompt), -1, 0, arr[i], 0]
+        return _i32(toks), _i32(meta), _i32(pins)
+
+    def compile_for(self, n_requests: int, lockstep: bool = False,
+                    instrumented: bool = False):
         """Pre-compile the serve loop for a queue length (off the clock);
         ``lockstep=True`` also pre-compiles the baseline executables so a
-        timed run_lockstep never pays compile."""
+        timed run_lockstep never pays compile, ``instrumented=True`` the
+        single-iteration executable run_instrumented steps."""
         if n_requests not in self._loops:
             self._loops[n_requests] = self._build_loop(n_requests)
         if lockstep:
             self._lockstep_executables()
+        if instrumented and n_requests not in self._iters:
+            self._iters[n_requests] = self._build_iter(n_requests)
         return self._loops[n_requests]
 
-    def run(self, requests: Sequence[Request]) -> ServeReport:
-        """Serve ``requests`` (all arriving at t=0) to completion."""
+    def run(self, requests: Sequence[Request],
+            arrival_iters: Optional[Sequence[int]] = None) -> ServeReport:
+        """Serve ``requests`` to completion.  ``arrival_iters`` holds an
+        open-loop arrival schedule in LOOP-ITERATION units (the device
+        clock): request i is not admitted before iteration
+        arrival_iters[i].  Default: everything arrives at t=0."""
         self._check(requests)
         loop = self.compile_for(len(requests))
-        q_toks = _i32(np.stack([np.asarray(r.prompt) for r in requests]))
-        q_meta = _i32(np.asarray(
-            [[r.rid, r.max_new_tokens, r.stop_token] for r in requests]))
-        state = jax.block_until_ready(self._init_state())  # off the clock,
-        t0 = time.time()                                   # like lockstep's
+        q_toks, q_meta, q_pins = self._stage(requests, arrival_iters)
+        carry = jax.block_until_ready(self._init_carry(len(requests)))
+        t0 = time.time()                    # compile + staging off the clock
         res = jax.block_until_ready(
-            loop(self._params, state, q_toks, q_meta))
+            loop(self._params, carry, q_toks, q_meta, q_pins))
         wall = time.time() - t0
         res_out, res_n = np.asarray(res["res_out"]), np.asarray(res["res_n"])
         res_iter, n_iter = np.asarray(res["res_iter"]), int(res["n_iter"])
+        res_first = np.asarray(res["res_first"])
         done = [FinishedRequest(
             rid=r.rid, tokens=res_out[i, :res_n[i]].copy(),
             latency_s=wall * int(res_iter[i]) / max(n_iter, 1),
-            finish_iter=int(res_iter[i]))
+            finish_iter=int(res_iter[i]), first_iter=int(res_first[i]))
             for i, r in enumerate(requests)]
         return ServeReport(finished=done, wall_s=wall,
                            n_steps=int(res["n_steps"]),
                            n_admits=int(res["n_admits"]), slots=self.slots,
                            n_drafted=int(res["n_drafted"]),
-                           n_accepted=int(res["n_accepted"]))
+                           n_accepted=int(res["n_accepted"]),
+                           n_pf=int(res.get("n_pf", 0)),
+                           peak_blocks=int(res.get("peak_blocks", 0)))
+
+    def run_instrumented(self, requests: Sequence[Request],
+                         arrival_iters: Optional[Sequence[int]] = None
+                         ) -> Tuple[ServeReport, Dict[str, np.ndarray]]:
+        """Serve with a host timestamp on EVERY loop iteration: the same
+        compiled iteration body the while_loop runs, stepped from the
+        host.  Wall time is inflated by one device->host sync per
+        iteration, so use ``run`` for throughput and this for latency
+        structure: real TTFT per request and the per-iteration duration
+        series (whose step-branch percentiles are the serve benchmark's
+        decode-stall gate).  Returns (report, timeline) where timeline
+        has ``branch`` (the switch index per iteration) and ``iter_s``."""
+        self._check(requests)
+        n = len(requests)
+        self.compile_for(n, instrumented=True)
+        it = self._iters[n]
+        q_toks, q_meta, q_pins = self._stage(requests, arrival_iters)
+        c = jax.block_until_ready(self._init_carry(n))
+        branches: List[int] = []
+        iter_s: List[float] = []
+        t0 = time.time()
+        t_prev = t0
+        while True:
+            c, br, cont = it(self._params, c, q_toks, q_meta, q_pins)
+            br, cont = int(br), bool(cont)          # per-iteration sync
+            t_now = time.time()
+            iter_s.append(t_now - t_prev)
+            t_prev = t_now
+            branches.append(br)
+            if not cont:
+                break
+        wall = time.time() - t0
+        res_out = np.asarray(c["res_out"])
+        res_n = np.asarray(c["res_n"])
+        res_iter = np.asarray(c["res_iter"])
+        res_first = np.asarray(c["res_first"])
+        cum = np.cumsum(iter_s)
+        at = lambda k: float(cum[min(int(k), len(cum) - 1)])
+        done = [FinishedRequest(
+            rid=r.rid, tokens=res_out[i, :res_n[i]].copy(),
+            latency_s=at(res_iter[i]), finish_iter=int(res_iter[i]),
+            first_iter=int(res_first[i]), ttft_s=at(res_first[i]))
+            for i, r in enumerate(requests)]
+        report = ServeReport(
+            finished=done, wall_s=wall, n_steps=int(c["n_steps"]),
+            n_admits=int(c["n_admits"]), slots=self.slots,
+            n_drafted=int(c["n_drafted"]), n_accepted=int(c["n_accepted"]),
+            n_pf=int(c.get("n_pf", 0)),
+            peak_blocks=int(c.get("peak_blocks", 0)))
+        timeline = dict(branch=np.asarray(branches, np.int32),
+                        iter_s=np.asarray(iter_s))
+        return report, timeline
 
     def run_lockstep(self, requests: Sequence[Request]) -> ServeReport:
         """Lock-step baseline through the SAME per-slot machinery: waves
@@ -547,6 +1030,9 @@ class ContinuousBatchingScheduler:
         per-request stop handling is applied post-hoc by truncation -- the
         pre-scheduler serve.py discipline, isolated so the benchmark delta
         is pure scheduling (identical kernels, admit path and step math)."""
+        if self.paged is not None:
+            raise ValueError("run_lockstep is the contiguous baseline; "
+                             "build the scheduler without paged=")
         self._check(requests)
         admit, drain = self._lockstep_executables()
         state = self._init_state()

@@ -38,6 +38,7 @@ import numpy as np
 from ..configs import ARCHS, get_config
 from ..data import DataConfig, batch_at
 from ..models import lm
+from .paging import PagedLayout
 from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
                         sampling_key)
 
@@ -381,7 +382,11 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                      pack: bool = True, temperature: float = 0.0,
                      seed: int = 0, compare_lockstep: bool = True,
                      repeats: int = 1, plan=None, fuse: bool = True,
-                     draft_k: int = 0, draft_plan=None, draft_adc_bits=None):
+                     draft_k: int = 0, draft_plan=None, draft_adc_bits=None,
+                     paged: PagedLayout | None = None,
+                     prefill_chunk: int | None = None,
+                     prefix_sharing: bool = True,
+                     adaptive_draft_k: bool = False):
     """Continuous-batching driver: a mixed-length request queue served
     from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
 
@@ -404,6 +409,9 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     """
     if draft_k and temperature > 0:
         compare_lockstep = False
+    compare_contiguous = paged is not None and compare_lockstep
+    if paged is not None:
+        compare_lockstep = False    # lock-step baseline is contiguous-only
     cfg = get_config(arch, smoke=smoke)
     if plan is not None:
         cim = True
@@ -430,7 +438,9 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     sched = ContinuousBatchingScheduler(
         params, cfg, slots=slots, prompt_len=prompt_len,
         max_new_cap=max(stop_lengths), temperature=temperature, seed=seed,
-        draft_k=draft_k, draft_plan=draft_plan)
+        draft_k=draft_k, draft_plan=draft_plan, paged=paged,
+        prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+        adaptive_draft_k=adaptive_draft_k)
     sched.compile_for(n_requests, lockstep=compare_lockstep)
     t_compile = time.time() - t0
 
@@ -450,6 +460,31 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     if draft_k:
         stats["draft_k"] = draft_k
         stats["draft_plan"] = draft_plan.summary()["<default>"]
+        if adaptive_draft_k:
+            stats["adaptive_draft_k"] = True
+    if paged is not None:
+        stats["paged"] = dict(block_size=paged.block_size,
+                              n_tbl=paged.n_tbl, n_blocks=paged.n_blocks,
+                              prefill_chunk=sched.prefill_chunk,
+                              prefix_sharing=prefix_sharing,
+                              peak_blocks=report.peak_blocks,
+                              kv_bytes_peak=sched.kv_bytes_paged(
+                                  report.peak_blocks),
+                              kv_bytes_contiguous=sched.kv_bytes_contiguous())
+    if compare_contiguous:
+        # paged vs contiguous parity: the paged pool may only change WHERE
+        # KV rows live, never a single token
+        ref = ContinuousBatchingScheduler(
+            params, cfg, slots=slots, prompt_len=prompt_len,
+            max_new_cap=max(stop_lengths), temperature=temperature,
+            seed=seed, draft_k=draft_k, draft_plan=draft_plan)
+        got, want = report.tokens_by_rid(), ref.run(requests).tokens_by_rid()
+        for rid in want:
+            np.testing.assert_array_equal(
+                got[rid], want[rid],
+                err_msg=f"request {rid}: paged KV changed tokens vs the "
+                        "contiguous scheduler")
+        stats["tokens_match_contiguous"] = True
     if compare_lockstep:
         base_runs = [sched.run_lockstep(requests) for _ in range(repeats)]
         base = max(base_runs, key=lambda r: r.tok_s)
@@ -469,6 +504,10 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
     if draft_k:
         mode += f"+spec-k{draft_k}"
+        if adaptive_draft_k:
+            mode += "-adaptive"
+    if paged is not None:
+        mode += f"+paged-bs{paged.block_size}"
     line = (f"[serve-cb] {arch} ({mode}): {n_requests} reqs x "
             f"stops{tuple(stop_lengths)} over {slots} slots | "
             f"{report.tok_s:.1f} tok/s, occupancy {report.occupancy:.0%}")
@@ -504,14 +543,38 @@ def main():
     ap.add_argument("--draft-adc-bits", type=int, default=None,
                     help="draft plan SAR width (default: smallest "
                          "non-clipping width per entry)")
+    ap.add_argument("--adaptive-draft-k", action="store_true",
+                    help="feed measured acceptance back into draft depth")
+    ap.add_argument("--paged-blocks", type=int, default=0,
+                    help="(--continuous) KV pool size in blocks; 0 keeps "
+                         "the contiguous per-slot layout")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="(--paged-blocks) tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="(--paged-blocks) prompt tokens prefilled per "
+                         "scheduler iteration (default: whole prompt)")
+    ap.add_argument("--no-prefix-sharing", dest="prefix_sharing",
+                    action="store_false",
+                    help="(--paged-blocks) disable shared-prefix reuse")
     args = ap.parse_args()
     if args.continuous:
+        paged = None
+        if args.paged_blocks:
+            from .paging import cdiv
+            max_seq = (args.prompt_len + 16
+                       + (args.draft_k if args.speculative else 0))
+            paged = PagedLayout(block_size=args.block_size,
+                                n_tbl=cdiv(max_seq, args.block_size),
+                                n_blocks=args.paged_blocks)
         serve_continuous(args.arch, smoke=args.smoke, slots=args.batch,
                          prompt_len=args.prompt_len,
                          n_requests=args.requests, cim=args.cim,
                          pack=args.pack, temperature=args.temperature,
                          draft_k=args.draft_k if args.speculative else 0,
-                         draft_adc_bits=args.draft_adc_bits)
+                         draft_adc_bits=args.draft_adc_bits,
+                         adaptive_draft_k=args.adaptive_draft_k,
+                         paged=paged, prefill_chunk=args.prefill_chunk,
+                         prefix_sharing=args.prefix_sharing)
     elif args.speculative:
         serve_speculative(args.arch, smoke=args.smoke, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,

@@ -27,6 +27,7 @@ import numpy as np
 from ..core.ccim import DEFAULT_CONFIG
 from ..core.engine import (CimEngine, FusedPackedCimWeights,
                            PackedCimWeights)
+from ..kernels.paged_attn import ops as paged_attn_ops
 from .config import ModelConfig
 
 Array = jax.Array
@@ -516,6 +517,8 @@ def attention_apply(
     n_prefix: int = 0,
     return_kv: bool = False,
     path: str = "attn",
+    block_table: Optional[Array] = None,             # (B, n_tbl) int32 paged
+    write_mask: Optional[Array] = None,              # (B,) bool: rows that write
 ):
     """Returns (out (B,S,D), new_kv or None).
 
@@ -524,11 +527,61 @@ def attention_apply(
     at different depths), and each row's validity horizon is its own
     ``cache_pos + S``.  ``path`` is the deployment-plan projection prefix
     (the zamba2 shared block passes "shared/attn").
+
+    With ``block_table`` the cache is PAGED: ``kv_cache`` holds global
+    ``(n_blocks, block_size, Hkv, Dh)`` pools shared by every row, and
+    row b's logical position p lives at pool[table[b, p//bs], p%bs].
+    Writes become a flat-index scatter through the table, reads gather
+    the table back into a dense per-row view and run the SAME masked
+    attention as the contiguous path (bit-identical tokens -- the
+    validity horizon does not care where rows physically live), except
+    S==1 decode reads, which route to the fused gather+attention kernel
+    in kernels/paged_attn when that backend path is enabled.  Rows whose
+    table entries are 0 hit the reserved trash block: harvested slots
+    park there so their frozen-position writes cannot corrupt blocks
+    that were recycled to live slots.
+
+    ``write_mask`` (paged only) redirects masked-OUT rows' KV writes to
+    the trash block.  The contiguous cache never needs it (a dead slot's
+    frozen-position writes stay inside its own region), but paged pools
+    are SHARED: a pooled decode/verify step would otherwise scribble a
+    non-live slot's garbage row into a block another request is still
+    reading (mid-chunked-prefill slots sit inside refcounted shared
+    blocks).  Live rows are untouched, so masking is bit-invisible.
     """
     B, S, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions, path)
     new_kv = None
-    if kv_cache is not None:
+    if kv_cache is not None and block_table is not None:
+        ck, cv = kv_cache
+        nb, bs, hkv, dh = ck.shape
+        n_tbl = block_table.shape[1]
+        pos_w = cache_pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        blk = jnp.take_along_axis(block_table,
+                                  jnp.minimum(pos_w // bs, n_tbl - 1), axis=1)
+        if write_mask is not None:
+            blk = jnp.where(write_mask[:, None], blk, 0)  # -> trash block
+        flat = (blk * bs + pos_w % bs).reshape(-1)
+        ckf = ck.reshape(nb * bs, hkv, dh).at[flat].set(
+            k.astype(ck.dtype).reshape(B * S, hkv, dh))
+        cvf = cv.reshape(nb * bs, hkv, dh).at[flat].set(
+            v.astype(cv.dtype).reshape(B * S, hkv, dh))
+        new_kv = (ckf.reshape(ck.shape), cvf.reshape(cv.shape))
+        if S == 1 and n_prefix == 0 and paged_attn_ops.kernel_enabled():
+            out = paged_attn_ops.paged_attention_decode(
+                q[:, 0], new_kv[0], new_kv[1], block_table, cache_pos + 1,
+                is_local, softcap=cfg.attn_softcap,
+                window=cfg.sliding_window)[:, None]
+            return _attn_out(p, out, cfg, B, S, path), new_kv
+        L = n_tbl * bs
+        idx = (block_table[:, :, None] * bs
+               + jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, L)
+        k_full = jnp.take(ckf, idx, axis=0)
+        v_full = jnp.take(cvf, idx, axis=0)
+        k_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+        valid = k_pos < (cache_pos[:, None] + S)
+        k_pos = jnp.where(valid, k_pos, 10 ** 9)
+    elif kv_cache is not None:
         ck, cv = kv_cache
 
         def row_write(c, u, s):
@@ -553,13 +606,18 @@ def attention_apply(
     else:
         out = plain_attention(q, k_full, v_full, positions, k_pos, cfg,
                               is_local, n_prefix)
+    return _attn_out(p, out, cfg, B, S, path), new_kv
+
+
+def _attn_out(p: Params, out: Array, cfg: ModelConfig, B: int, S: int,
+              path: str) -> Array:
+    """Shared attention epilogue: TP-pad head masking + wo projection."""
     mask = _head_mask(cfg)
     if mask is not None:
         # zero the TP-pad heads: keeps wo/wq pad slots at exactly zero
         # through training (their grads vanish here)
         out = out * mask[None, None, :, None].astype(out.dtype)
-    out = _dense(out.reshape(B, S, -1), p["wo"], cfg, f"{path}/wo")
-    return out, new_kv
+    return _dense(out.reshape(B, S, -1), p["wo"], cfg, f"{path}/wo")
 
 
 # ---------------------------------------------------------------------------

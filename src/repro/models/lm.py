@@ -309,14 +309,18 @@ def _logits(p, cfg: ModelConfig, x: Array) -> Array:
 
 
 def _attn_block(blk, x, cfg, positions, is_local, kv=None, cache_pos=None,
-                n_prefix=0, return_kv=False, prefix=""):
+                n_prefix=0, return_kv=False, prefix="", block_table=None,
+                write_mask=None):
     """``prefix`` qualifies the deployment-plan projection paths: the
     scanned per-layer stacks use "" (paths "attn/wq", "mlp/w1", ...), the
-    zamba2 shared block passes "shared/"."""
+    zamba2 shared block passes "shared/".  ``block_table`` switches the
+    KV cache to paged pools and ``write_mask`` redirects non-live rows'
+    paged writes to the trash block (see layers.attention_apply)."""
     h, new_kv = L.attention_apply(
         blk["attn"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg, positions,
         is_local, kv_cache=kv, cache_pos=cache_pos, n_prefix=n_prefix,
-        return_kv=return_kv, path=prefix + "attn")
+        return_kv=return_kv, path=prefix + "attn", block_table=block_table,
+        write_mask=write_mask)
     x = x + h
     if "moe" in blk:
         h, aux = L.moe_apply(blk["moe"], L.rms_norm(x, blk["ln2"], cfg.norm_eps),
@@ -435,6 +439,46 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return c
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int, n_tbl: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Array]:
+    """Allocate the PAGED decode cache: per-layer global KV block pools
+    plus a per-slot block table.
+
+    KV memory no longer scales with ``batch * max_seq`` -- the pools are
+    ``(n_layers, n_blocks, block_size, hkv, dh)`` shared by every slot,
+    and slot b's logical row p resolves through ``table[b, p //
+    block_size]``.  The presence of the ``"table"`` key is what flips
+    prefill/decode_step/verify_step (and the slot helpers) into paged
+    mode; SSM/conv state stays per-slot dense (it is O(1) per slot, not
+    O(max_seq)).  Block 0 is reserved as the trash block by the
+    allocator (launch/scheduler.py); an all-zero table row -- the reset
+    state -- therefore points every position at garbage no live slot
+    reads.
+    """
+    c: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32),
+                         "table": jnp.zeros((batch, n_tbl), jnp.int32)}
+    hkv, dh = cfg.padded_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.n_layers, n_blocks, block_size, hkv, dh)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        W = cfg.ssm_conv_width
+        c["ssm"] = jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32)
+        c["conv_x"] = jnp.zeros((cfg.n_layers, batch, W - 1, cfg.d_inner),
+                                dtype)
+        c["conv_bc"] = jnp.zeros((cfg.n_layers, batch, W - 1, 2 * N), dtype)
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        n_inv = cfg.n_layers // cfg.shared_attn_period
+        c["shared_k"] = jnp.zeros((n_inv, n_blocks, block_size, hkv, dh),
+                                  dtype)
+        c["shared_v"] = jnp.zeros((n_inv, n_blocks, block_size, hkv, dh),
+                                  dtype)
+    return c
+
+
 # ---------------------------------------------------------------------------
 # slot-level cache ops (continuous batching, launch/scheduler.py)
 # ---------------------------------------------------------------------------
@@ -442,23 +486,43 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 # stacked per layer/group -- except "pos", which is the (batch,) position
 # vector itself.  ``slot`` may be a traced scalar, so one compiled
 # reset/refill executable serves every slot in the pool.
+#
+# In PAGED caches (init_paged_cache) the KV entries are global block pools
+# with NO batch axis: the slot helpers pass them through whole (every slot
+# addresses the pools through its table row), and per-slot state is just
+# "pos", "table" and the SSM/conv entries.
+
+
+_POOL_KEYS = frozenset({"k", "v", "shared_k", "shared_v"})
+
+
+def is_paged(cache: Dict) -> bool:
+    return "table" in cache
 
 
 def _slot_axis(key: str) -> int:
-    return 0 if key == "pos" else 1
+    return 0 if key in ("pos", "table") else 1
 
 
 def slot_slice(cache: Dict, slot) -> Dict:
-    """Extract a batch-1 view of one pool slot (same structure, batch=1)."""
-    return {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, _slot_axis(k))
+    """Extract a batch-1 view of one pool slot (same structure, batch=1).
+    Paged KV pools are returned whole -- they are shared, and the slot's
+    table row is what scopes them."""
+    paged = is_paged(cache)
+    return {k: (v if paged and k in _POOL_KEYS else
+                jax.lax.dynamic_slice_in_dim(v, slot, 1, _slot_axis(k)))
             for k, v in cache.items()}
 
 
 def slot_update(cache: Dict, sub: Dict, slot) -> Dict:
     """Write a batch-1 sub-cache back into pool slot ``slot``."""
-    return {k: jax.lax.dynamic_update_slice_in_dim(
-        cache[k], sub[k].astype(cache[k].dtype), slot, _slot_axis(k))
-        for k in cache}
+    paged = is_paged(cache)
+    return {k: (sub[k].astype(cache[k].dtype)
+                if paged and k in _POOL_KEYS else
+                jax.lax.dynamic_update_slice_in_dim(
+                    cache[k], sub[k].astype(cache[k].dtype), slot,
+                    _slot_axis(k)))
+            for k in cache}
 
 
 def _zeroed_slot(cache: Dict, slot) -> Dict:
@@ -468,8 +532,17 @@ def _zeroed_slot(cache: Dict, slot) -> Dict:
     hides everything at or beyond ``pos`` -- but SSM/conv state feeds the
     recurrence as an initial value, so a freed slot MUST be cleared before
     its next prefill.  One op clears both uniformly.
+
+    Paged caches keep the pools (shared!) AND the slot's table row: block
+    mapping is owned by the scheduler's allocator, which arms the table
+    BEFORE prefilling and clears it at harvest -- a reset between the two
+    must not sever the mapping.
     """
-    return jax.tree.map(jnp.zeros_like, slot_slice(cache, slot))
+    paged = is_paged(cache)
+    sub = slot_slice(cache, slot)
+    return {k: (v if paged and k in _POOL_KEYS | {"table"}
+                else jnp.zeros_like(v))
+            for k, v in sub.items()}
 
 
 def reset_slot(cache: Dict, slot) -> Dict:
@@ -493,6 +566,56 @@ def prefill_into_slot(params, cfg: ModelConfig, tokens: Array, cache: Dict,
     return logits, slot_update(cache, sub, slot)
 
 
+def prefill_chunk_into_slot(params, cfg: ModelConfig, tokens: Array,
+                            cache: Dict, slot) -> Tuple[Array, Dict]:
+    """Advance ONE slot's prefill by one chunk (tokens (1, C)).
+
+    The chunk starts at the slot's current ``cache["pos"]`` (the
+    scheduler arms pos before the first chunk and tracks progress through
+    it), runs a batch-1 forward at absolute positions [pos, pos+C), and
+    leaves pos at pos+C.  Unlike ``prefill_into_slot`` the slot is NOT
+    reset -- earlier chunks' KV rows (or a shared prefix's refcounted
+    blocks) are the context this chunk attends to.
+
+    Returns logits for ALL C chunk positions: the scheduler samples the
+    request's first token from row ``plen-1 - start`` of the final chunk.
+    For attention families every row is bit-identical to the same row of
+    a single-shot prefill (row-local GEMMs + per-row softmax over an
+    identical masked key stream), so chunked admission preserves the
+    token contract.  SSM/hybrid chunks carry conv+SSM state across calls
+    and are bit-identical when chunk boundaries align with
+    ``cfg.ssm_chunk`` and prompt lengths are chunk multiples (the
+    scheduler enforces this; a garbage chunk tail would corrupt the
+    recurrent state, unlike attention where the validity horizon masks
+    it).
+    """
+    sub = slot_slice(cache, slot)
+    x, n_prefix = _embed(params, cfg, tokens, None)
+    B, S, _ = x.shape
+    pos = sub["pos"]
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    sub = dict(sub)
+    tbl = sub.get("table")
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, sub = _ssm_stack_cached(params, cfg, x, positions, sub,
+                                   decode=False, chunked=True)
+    else:
+        def body(x, scanned):
+            blk, is_local, ck, cv = scanned
+            x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
+                                       kv=(ck, cv), cache_pos=pos,
+                                       n_prefix=n_prefix, block_table=tbl)
+            return x, new_kv
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], _is_local_arr(cfg), sub["k"],
+                      sub["v"]))
+        sub["k"], sub["v"] = ck, cv
+    sub["pos"] = pos + S
+    logits = _logits(params, cfg, x)
+    return logits, slot_update(cache, sub, slot)
+
+
 # ---------------------------------------------------------------------------
 # inference: prefill + decode
 # ---------------------------------------------------------------------------
@@ -505,6 +628,7 @@ def prefill(params, cfg: ModelConfig, tokens: Array, cache: Dict,
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
     cache = dict(cache)
+    tbl = cache.get("table")
 
     if cfg.family in ("ssm", "hybrid"):
         x, cache = _ssm_stack_cached(params, cfg, x, positions, cache,
@@ -515,7 +639,7 @@ def prefill(params, cfg: ModelConfig, tokens: Array, cache: Dict,
             blk, is_local, ck, cv = scanned
             x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
                                        kv=(ck, cv), cache_pos=pos0,
-                                       n_prefix=n_prefix)
+                                       n_prefix=n_prefix, block_table=tbl)
             return x, new_kv
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
@@ -533,21 +657,37 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
     bool) freezes finished slots: their position does not advance, so a
     dead slot idles at a fixed depth until the scheduler refills it
     (``prefill_into_slot``) -- its logits are computed but discarded.
+    In PAGED caches ``live`` additionally masks the side effects a
+    frozen slot must not have: its KV write is redirected to the trash
+    block (its table may alias blocks a live request reads -- shared
+    prefixes, or its own half-prefilled chunks) and its SSM/conv state
+    is held (a filling slot's recurrence must survive interleaved pool
+    steps until its next chunk).
     """
     x = jnp.take(params["embed"], token, axis=0)
     B = x.shape[0]
     pos = cache["pos"]
     positions = pos[:, None].astype(jnp.int32)
     cache = dict(cache)
+    tbl = cache.get("table")
+    wmask = live if (live is not None and tbl is not None) else None
 
     if cfg.family in ("ssm", "hybrid"):
+        old = {k: cache[k] for k in ("ssm", "conv_x", "conv_bc")
+               if k in cache}
         x, cache = _ssm_stack_cached(params, cfg, x, positions, cache,
-                                     decode=True)
+                                     decode=True, write_mask=wmask)
+        if wmask is not None:
+            m = wmask[None, :, None, None]
+            for k, v in old.items():
+                keep = m[..., None] if cache[k].ndim == 5 else m
+                cache[k] = jnp.where(keep, cache[k], v)
     else:
         def body(x, scanned):
             blk, is_local, ck, cv = scanned
             x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
-                                       kv=(ck, cv), cache_pos=pos)
+                                       kv=(ck, cv), cache_pos=pos,
+                                       block_table=tbl, write_mask=wmask)
             return x, new_kv
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
@@ -557,8 +697,8 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
     return _logits(params, cfg, x), cache
 
 
-def verify_step(params, cfg: ModelConfig, tokens: Array,
-                cache: Dict) -> Tuple[Array, Dict]:
+def verify_step(params, cfg: ModelConfig, tokens: Array, cache: Dict,
+                live: Optional[Array] = None) -> Tuple[Array, Dict]:
     """tokens (B, S) -> logits (B, S, V): the speculative-verify forward.
 
     All S = k+1 positions of a draft block go through the model in ONE
@@ -575,7 +715,10 @@ def verify_step(params, cfg: ModelConfig, tokens: Array,
     produce after committing tokens[:, :i+1]: the attention route is
     pinned to the plain kernel (decode's own S==1 route; flash's online
     softmax has a different reduction order), and everything else is
-    row-local float math.  Restricted to positional-cache families:
+    row-local float math.  ``live`` matters only for paged caches: it
+    redirects non-live rows' draft-block writes to the trash block so a
+    pooled verify cannot scribble into blocks a mid-prefill or harvested
+    slot's table still aliases.  Restricted to positional-cache families:
     SSM/conv recurrent state advances destructively and cannot be rolled
     back by masking.
     """
@@ -591,11 +734,14 @@ def verify_step(params, cfg: ModelConfig, tokens: Array,
     pos = cache["pos"]
     positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     cache = dict(cache)
+    tbl = cache.get("table")
+    wmask = live if (live is not None and tbl is not None) else None
 
     def body(x, scanned):
         blk, is_local, ck, cv = scanned
         x, new_kv, _ = _attn_block(blk, x, cfg, positions, is_local,
-                                   kv=(ck, cv), cache_pos=pos)
+                                   kv=(ck, cv), cache_pos=pos,
+                                   block_table=tbl, write_mask=wmask)
         return x, new_kv
     x, (ck, cv) = jax.lax.scan(
         body, x, (params["layers"], _is_local_arr(cfg), cache["k"],
@@ -605,14 +751,23 @@ def verify_step(params, cfg: ModelConfig, tokens: Array,
 
 
 def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
-                      decode: bool):
+                      decode: bool, chunked: bool = False,
+                      write_mask=None):
+    """``chunked=True`` is the mid-prompt prefill mode: conv + SSM state
+    carry across chunk calls (a fresh prefill passes zero conv state via
+    None -- bit-identical to explicit zeros) and the hybrid shared-attn
+    block writes at the slot's current ``pos`` instead of 0.
+    ``write_mask`` guards the paged shared-attn KV write for non-live
+    rows (decode_step holds their SSM/conv state itself)."""
     pos = cache["pos"]
+    tbl = cache.get("table")
 
     def body(x, scanned):
         blk, ssm_st, cx, cbc = scanned
         h, (new_ssm, new_conv) = L.mamba2_apply(
             blk["mamba"], L.rms_norm(x, blk["ln1"], cfg.norm_eps), cfg,
-            ssm_state=ssm_st, conv_state=(cx, cbc) if decode else None,
+            ssm_state=ssm_st,
+            conv_state=(cx, cbc) if (decode or chunked) else None,
             decode=decode)
         return x + h, (new_ssm, new_conv[0], new_conv[1])
 
@@ -640,8 +795,8 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
         x, kv, _ = _attn_block(
             params["shared"], x, cfg, positions, jnp.bool_(False),
             kv=(cache["shared_k"][g], cache["shared_v"][g]),
-            cache_pos=pos if decode else jnp.zeros_like(pos),
-            prefix="shared/")
+            cache_pos=pos if (decode or chunked) else jnp.zeros_like(pos),
+            prefix="shared/", block_table=tbl, write_mask=write_mask)
         new_k.append(kv[0]); new_v.append(kv[1])
         done = (g + 1) * period
     if done < cfg.n_layers:

@@ -330,6 +330,77 @@ def test_refill_mid_draft_bit_identical_to_solo():
         np.testing.assert_array_equal(toks, solo[rid])
 
 
+def test_refill_mid_draft_paged_rollback_bit_identical():
+    """REGRESSION -- speculative rollback on a PAGED pool while slots
+    refill mid-stream.  The hazard chain this pins down: a draft/verify
+    round writes KV rows up to pos+K into a slot's blocks before rolling
+    ``pos`` back; meanwhile a NEIGHBORING slot is harvested and re-armed,
+    which frees and re-grants pool blocks.  If rollback touched the block
+    table, or if a dead/filling slot's draft writes were not redirected
+    to the trash block, the recycled blocks would carry stale rows and
+    tokens would diverge.  Every request must match its solo
+    non-speculative contiguous run bit for bit, and the pool must recycle
+    (more total block-grants than the pool holds)."""
+    from repro.launch.paging import PagedLayout
+
+    params, cfg = _params("musicgen-medium")
+    P, CAP, K = 8, 6, 3
+    reqs = mixed_length_requests(6, P, cfg.vocab_size,
+                                 stop_lengths=(2, 6, 3, 5))
+    solo = {}
+    for r in reqs:
+        toks, _ = _pool_tokens(params, cfg, [r], P, CAP, slots=1)
+        solo[r.rid] = toks[r.rid]
+    # pool of 18 usable blocks; 6 requests x ~5 blocks each (prompt +
+    # budget + draft headroom) forces several free->re-grant cycles
+    lay = PagedLayout(block_size=4, n_tbl=6, n_blocks=19)
+    sched = ContinuousBatchingScheduler(
+        params, cfg, slots=2, prompt_len=P, max_new_cap=CAP, draft_k=K,
+        paged=lay, prefill_chunk=4)
+    report = sched.run(reqs)
+    assert report.n_admits == len(reqs)
+    assert report.n_drafted > 0
+    got = report.tokens_by_rid()
+    for rid, toks in got.items():
+        np.testing.assert_array_equal(toks, solo[rid])
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_adaptive_draft_k_greedy_invariant(paged):
+    """Adaptive draft depth (acceptance-EMA-driven rung switching) may
+    change HOW MANY tokens each round drafts, never WHICH tokens are
+    emitted: greedy output is bit-identical to the fixed-k scheduler at
+    every rung, because accept-longest-prefix + correction reproduces
+    the verify model's argmax chain at any draft depth."""
+    from repro.launch.paging import PagedLayout
+
+    params, cfg = _params("musicgen-medium")
+    P, CAP = 8, 6
+    reqs = mixed_length_requests(5, P, cfg.vocab_size,
+                                 stop_lengths=(2, 6, 4, 5))
+    kw = dict(slots=2, prompt_len=P, max_new_cap=CAP)
+    if paged:
+        kw.update(paged=PagedLayout(block_size=4, n_tbl=6, n_blocks=24),
+                  prefill_chunk=4)
+    want = ContinuousBatchingScheduler(
+        params, cfg, draft_k=4, **kw).run(reqs).tokens_by_rid()
+    sched = ContinuousBatchingScheduler(
+        params, cfg, draft_k=4, adaptive_draft_k=True, **kw)
+    assert sched._rungs == [4, 2, 1]
+    report = sched.run(reqs)
+    got = report.tokens_by_rid()
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert report.n_drafted > 0
+
+
+def test_adaptive_draft_k_requires_speculative():
+    params, cfg = _params("musicgen-medium")
+    with pytest.raises(ValueError, match="adaptive_draft_k"):
+        ContinuousBatchingScheduler(params, cfg, slots=2, prompt_len=8,
+                                    max_new_cap=6, adaptive_draft_k=True)
+
+
 # ---------------------------------------------------------------------------
 # autotune cache robustness (satellite)
 # ---------------------------------------------------------------------------
