@@ -6,7 +6,7 @@ split-DAC shrink the analog array."""
 import numpy as np
 
 from .common import emit
-from repro.core import CCIMConfig, DEFAULT_CONFIG, contribution_table
+from repro.core import DEFAULT_CONFIG, contribution_table
 from repro.core.costmodel import _array_caps
 
 

@@ -4,7 +4,6 @@ Paper: 0.435% rms, lowest among CIM prototypes [3-6,12-14]; 35.0 TOPS/W;
 ACIM power dominates.  We reproduce the protocol bit-true and compare the
 functional baselines."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .common import emit, time_us

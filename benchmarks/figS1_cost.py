@@ -2,15 +2,12 @@
 complex-CIM baselines; plus the accuracy-equivalence check (all three
 designs compute the same function; error correlation differs)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .common import emit
 from repro.core import DEFAULT_CONFIG, baselines, fabricate
-from repro.core.complex_mac import complex_cim_matmul_int
-from repro.core.costmodel import (cost_duplicated, cost_sequential,
-                                  cost_this_work, density_mb_per_mm2,
-                                  figS1_comparison, macro_area_breakdown)
+from repro.core.costmodel import (density_mb_per_mm2, figS1_comparison,
+                                  macro_area_breakdown)
 
 
 def run(seed: int = 0):

@@ -6,7 +6,6 @@ shows the hybrid architecture keeps RMS error flat up to the design point
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .common import emit

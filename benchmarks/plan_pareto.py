@@ -25,7 +25,6 @@ AOT-compiled, zero recompiles across decode steps); RMS and modeled cost
 come from repro.plan's profiler/cost machinery.
 """
 import argparse
-import dataclasses
 import json
 import os
 import sys

@@ -10,7 +10,7 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
+    ap.parse_args()
 
     from . import (fig2_contribution, fig5_transfer, fig6_rms, figS1_cost,
                    figS2_montecarlo, figS3_doa, kernel_bench)

@@ -1,0 +1,20 @@
+"""repro.analysis -- "cimlint": static trace/kernel/AST auditing.
+
+The stack's correctness claims are *static*: the macro geometry (2D
+capacitor weighting, folded DCIM planes, ADC width), the deployment
+plan, the packed-weight metadata and the Pallas block shapes are all
+fixed before a single token is served.  This package proves the
+invariants those claims rest on without executing any kernel:
+
+- ``tracer``  -- lower the serve-path executables to jaxprs and audit
+  dtypes, control-flow purity, buffer donation and the static-argument
+  (recompile-key) space.
+- ``kernels`` -- intercept every registered Pallas dispatch under
+  ``jax.eval_shape`` and check VMEM budgets, block divisibility and
+  grid-aliasing safety for every plan design point.
+- ``lint``    -- repo-specific AST rules (import-time config mutation,
+  host syncs reachable from traced control flow, noise-seed hygiene).
+
+Run ``python -m repro.analysis --strict`` (see DESIGN.md section 12).
+"""
+from .report import AnalysisReport, Violation, load_baseline  # noqa: F401

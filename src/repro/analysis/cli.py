@@ -1,0 +1,89 @@
+"""``python -m repro.analysis``: run cimlint, emit ANALYSIS.json, gate.
+
+Modes:
+
+  python -m repro.analysis                  report-only (exit 0)
+  python -m repro.analysis --strict         exit 1 on any violation
+  python -m repro.analysis --strict --baseline ANALYSIS.json
+                                            exit 1 only on NEW violations
+                                            (committed waivers don't block)
+
+Sections can be skipped (``--skip trace``) for fast iteration; the CI
+gate runs all three.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Optional, Sequence
+
+from .report import AnalysisReport, load_baseline
+
+SECTIONS = ("lint", "kernels", "trace")
+_PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_analysis(sections: Sequence[str] = SECTIONS,
+                 arch: str = "minicpm-2b",
+                 with_scheduler: bool = True,
+                 lint_root: Optional[str] = None) -> AnalysisReport:
+    report = AnalysisReport()
+    if "lint" in sections:
+        from .lint import lint_package
+        lint_package(lint_root or _PKG_ROOT, report)
+    if "kernels" in sections:
+        from .kernels import sweep_kernels
+        sweep_kernels(report)
+    if "trace" in sections:
+        from .tracer import audit_serve_path
+        audit_serve_path(report, arch=arch, with_scheduler=with_scheduler)
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="cimlint: static trace/kernel/AST audit of the "
+                    "serving stack")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on (new) violations")
+    ap.add_argument("--baseline", default=None,
+                    help="previous ANALYSIS.json; its violations are "
+                    "waived (diff mode)")
+    ap.add_argument("--out", default="ANALYSIS.json",
+                    help="report path (default: ANALYSIS.json)")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=list(SECTIONS), help="skip a section")
+    ap.add_argument("--arch", default="minicpm-2b",
+                    help="config registry name for the serve-path audit")
+    ap.add_argument("--no-scheduler", action="store_true",
+                    help="skip the scheduler while-loop executable "
+                    "(fastest trace section)")
+    args = ap.parse_args(argv)
+
+    sections = [s for s in SECTIONS if s not in args.skip]
+    t0 = time.time()
+    report = run_analysis(sections, arch=args.arch,
+                          with_scheduler=not args.no_scheduler)
+    report.census["sections"] = sections
+    report.census["wall_s"] = round(time.time() - t0, 1)
+    report.save(args.out)
+
+    print(report.summary())
+    print(f"wrote {args.out} ({report.census['wall_s']}s)")
+
+    baseline = load_baseline(args.baseline) if args.baseline else None
+    new = report.new_violations(baseline)
+    if baseline is not None:
+        waived = len(report.violations) - len(new)
+        if waived:
+            print(f"{waived} violation(s) waived by baseline "
+                  f"{args.baseline}")
+    if new and args.strict:
+        print(f"FAIL: {len(new)} new violation(s)")
+        return 1
+    if new:
+        print(f"{len(new)} violation(s) (report-only mode; use --strict "
+              "to gate)")
+    return 0

@@ -1,0 +1,298 @@
+"""Repo-specific AST lint: the invariants that live in *source shape*,
+not in any trace.
+
+- AST-IMPORT-CONFIG  no ``jax.config`` mutation at import time: a module
+  that flips x64/platform flags on import changes numerics for every
+  importer, ordering-dependently.
+- AST-IMPURE-TRACE   no Python ``random``/``time`` calls inside
+  jit-decorated functions -- they execute once at trace time and freeze
+  a single sample into the executable.
+- AST-HOST-SYNC      no ``.item()`` / ``np.asarray()`` /
+  ``.block_until_ready()`` reachable from a ``lax.while_loop`` /
+  ``lax.switch`` / ``lax.cond`` / ``lax.scan`` body: inside a traced
+  body these either fail at trace time or (worse) silently force a
+  host round-trip per iteration when the body also runs eagerly.
+- AST-STATIC-META    classes registered via
+  ``jax.tree_util.register_dataclass`` must be frozen dataclasses --
+  their meta fields are jit cache keys and must hash by value.
+- AST-NOISE-SEED     in the numerics modules every
+  ``jax.random.PRNGKey`` must derive from ``cim_noise_seed`` -- the
+  deterministic-noise contract (same plan, same seed => bit-identical
+  tokens) dies with one ad-hoc PRNGKey(0).
+
+All rules run on the AST alone (no imports of the linted code), so the
+lint can't be defeated by import-time side effects -- and it lints
+files the test suite never loads.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set, Tuple
+
+from .report import AnalysisReport
+
+HOST_SYNC_CALLS = ("item", "block_until_ready")
+HOST_SYNC_NP_FUNCS = ("asarray", "array")
+LAX_BODY_CONSUMERS = ("while_loop", "switch", "cond", "scan", "fori_loop")
+IMPURE_MODULES = ("random", "time")
+NOISE_SEED_MODULES = (
+    "core/ccim.py", "core/qat.py", "core/engine.py",
+    "core/complex_mac.py", "models/layers.py",
+)
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """'jax.config.update' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        for node in ast.walk(dec):
+            if isinstance(node, ast.Attribute) and node.attr == "jit":
+                return True
+            if isinstance(node, ast.Name) and node.id == "jit":
+                return True
+    return False
+
+
+def _stdlib_aliases(tree: ast.Module) -> Tuple[Set[str], Set[str]]:
+    """(module aliases, bare names) bound to python random/time."""
+    mods: Set[str] = set()
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in IMPURE_MODULES:
+                    mods.add(a.asname or a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in IMPURE_MODULES and not node.level:
+                for a in node.names:
+                    names.add(a.asname or a.name)
+    return mods, names
+
+
+class Linter:
+    def __init__(self, relpath: str, src: str, report: AnalysisReport):
+        self.relpath = relpath
+        self.report = report
+        self.tree = ast.parse(src)
+        self.funcs: Dict[str, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.funcs.setdefault(node.name, node)
+
+    def _add(self, rule: str, node: ast.AST, detail: str) -> None:
+        line = getattr(node, "lineno", 0)
+        self.report.add(rule, f"{self.relpath}:{line}", detail)
+
+    # -- AST-IMPORT-CONFIG --------------------------------------------
+
+    def check_import_config(self) -> None:
+        self.report.check("AST-IMPORT-CONFIG")
+
+        def scan(stmt: ast.stmt) -> None:
+            # function bodies run at call time, not import time
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                return
+            if (isinstance(stmt, ast.If)
+                    and "__main__" in ast.dump(stmt.test)):
+                return   # script entry, not import time
+            if isinstance(stmt, ast.Call):
+                chain = _attr_chain(stmt.func)
+                if ".config.update" in chain or chain.startswith(
+                        "config.update"):
+                    self._add(
+                        "AST-IMPORT-CONFIG", stmt,
+                        f"`{chain}(...)` at import time -- global "
+                        "numerics flipped for every importer")
+            elif isinstance(stmt, (ast.Assign, ast.AugAssign)):
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for t in targets:
+                    chain = _attr_chain(t)
+                    if ".config." in chain:
+                        self._add("AST-IMPORT-CONFIG", stmt,
+                                  f"assignment to `{chain}` at import time")
+            for sub in ast.iter_child_nodes(stmt):
+                scan(sub)
+
+        for stmt in self.tree.body:
+            scan(stmt)
+
+    # -- AST-IMPURE-TRACE ---------------------------------------------
+
+    def check_impure_trace(self) -> None:
+        mods, names = _stdlib_aliases(self.tree)
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _is_jit_decorated(fn):
+                continue
+            self.report.check("AST-IMPURE-TRACE")
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                root = chain.split(".", 1)[0]
+                if (root in mods and "." in chain) or chain in names:
+                    self._add(
+                        "AST-IMPURE-TRACE", node,
+                        f"`{chain}()` inside jit-decorated "
+                        f"`{fn.name}` -- evaluated once at trace time, "
+                        "frozen into the executable")
+
+    # -- AST-HOST-SYNC ------------------------------------------------
+
+    def _body_roots(self) -> List[Tuple[str, ast.AST]]:
+        """Functions/lambdas passed as bodies to lax control flow."""
+        roots: List[Tuple[str, ast.AST]] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            leaf = chain.rsplit(".", 1)[-1]
+            if leaf not in LAX_BODY_CONSUMERS:
+                continue
+            cands = list(node.args)
+            for arg in cands:
+                if isinstance(arg, ast.Lambda):
+                    roots.append((f"lax.{leaf}", arg))
+                elif isinstance(arg, ast.Name) and arg.id in self.funcs:
+                    roots.append((f"lax.{leaf}", self.funcs[arg.id]))
+                elif isinstance(arg, (ast.List, ast.Tuple)):
+                    for el in arg.elts:
+                        if isinstance(el, ast.Lambda):
+                            roots.append((f"lax.{leaf}", el))
+                        elif (isinstance(el, ast.Name)
+                              and el.id in self.funcs):
+                            roots.append((f"lax.{leaf}",
+                                          self.funcs[el.id]))
+        return roots
+
+    def _scan_host_sync(self, ctx: str, fn: ast.AST,
+                        visited: Set[int]) -> None:
+        if id(fn) in visited:
+            return
+        visited.add(id(fn))
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            leaf = chain.rsplit(".", 1)[-1]
+            if leaf in HOST_SYNC_CALLS:
+                self._add(
+                    "AST-HOST-SYNC", node,
+                    f"`.{leaf}()` reachable from a {ctx} body -- host "
+                    "sync per iteration (or trace failure)")
+            elif (leaf in HOST_SYNC_NP_FUNCS
+                  and chain.split(".", 1)[0] in ("np", "numpy", "onp")):
+                self._add(
+                    "AST-HOST-SYNC", node,
+                    f"`{chain}()` reachable from a {ctx} body -- "
+                    "forces device->host materialization")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in self.funcs):
+                self._scan_host_sync(ctx, self.funcs[node.func.id], visited)
+
+    def check_host_sync(self) -> None:
+        self.report.check("AST-HOST-SYNC")
+        for ctx, root in self._body_roots():
+            self._scan_host_sync(ctx, root, set())
+
+    # -- AST-STATIC-META ----------------------------------------------
+
+    def check_static_meta(self) -> None:
+        classes: Dict[str, ast.ClassDef] = {
+            n.name: n for n in ast.walk(self.tree)
+            if isinstance(n, ast.ClassDef)}
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _attr_chain(node.func).rsplit(".", 1)[-1] != \
+                    "register_dataclass":
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Name):
+                continue
+            self.report.check("AST-STATIC-META")
+            cls = classes.get(node.args[0].id)
+            if cls is None:
+                continue   # registered from another module; out of scope
+            frozen = False
+            for dec in cls.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                if _attr_chain(dec.func).rsplit(".", 1)[-1] != "dataclass":
+                    continue
+                for kw in dec.keywords:
+                    if (kw.arg == "frozen"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True):
+                        frozen = True
+            if not frozen:
+                self._add(
+                    "AST-STATIC-META", cls,
+                    f"`{cls.name}` is registered as a pytree dataclass "
+                    "but not @dataclass(frozen=True) -- its static meta "
+                    "fields are jit cache keys and must hash by value")
+
+    # -- AST-NOISE-SEED -----------------------------------------------
+
+    def check_noise_seed(self) -> None:
+        if not self.relpath.replace(os.sep, "/").endswith(
+                NOISE_SEED_MODULES):
+            return
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _attr_chain(node.func).rsplit(".", 1)[-1] != "PRNGKey":
+                continue
+            self.report.check("AST-NOISE-SEED")
+            src = "".join(ast.unparse(a) for a in node.args)
+            if "cim_noise_seed" not in src:
+                self._add(
+                    "AST-NOISE-SEED", node,
+                    f"PRNGKey({src}) in a numerics module does not "
+                    "derive from cim_noise_seed -- breaks the "
+                    "deterministic noise-stream contract")
+
+    def run(self) -> None:
+        self.check_import_config()
+        self.check_impure_trace()
+        self.check_host_sync()
+        self.check_static_meta()
+        self.check_noise_seed()
+
+
+def lint_source(relpath: str, src: str, report: AnalysisReport) -> None:
+    try:
+        Linter(relpath, src, report).run()
+    except SyntaxError as e:
+        report.add("AST-PARSE", relpath, f"unparsable: {e}")
+
+
+def lint_package(root: str, report: AnalysisReport) -> int:
+    """Lint every .py under ``root`` (the src/repro tree); returns the
+    number of files linted."""
+    n = 0
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            with open(path) as f:
+                lint_source(rel, f.read(), report)
+            n += 1
+    report.census["files_linted"] = n
+    return n

@@ -1,0 +1,128 @@
+"""Violation records, the analysis report, JSON emit and baseline diff.
+
+``ANALYSIS.json`` is the machine-readable artifact CI uploads next to
+the BENCH jsons: per-rule counts, per-kernel VMEM tables and the
+executable census.  A committed copy doubles as the ``--baseline`` for
+diff mode -- pre-existing (waived) violations don't block the build,
+new ones do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule firing at one site.
+
+    ``rule`` is the stable identifier (TRACE-*/KERNEL-*/AST-*); ``where``
+    locates the site (entry point, kernel@shape, file:line) and is the
+    baseline-diff key together with the rule, so the *detail* text can
+    improve without resurrecting waived findings.
+    """
+
+    rule: str
+    where: str
+    detail: str
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.rule, self.where)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.detail}"
+
+
+class AnalysisReport:
+    """Accumulator shared by the three analyzers."""
+
+    def __init__(self) -> None:
+        self.violations: List[Violation] = []
+        self.checked: Counter = Counter()          # rule -> sites audited
+        self.vmem_table: List[Dict[str, Any]] = []  # one row per dispatch
+        self.census: Dict[str, Any] = {}           # executable census
+        self.notes: List[str] = []                 # skips/caps, never silent
+
+    # -- recording -----------------------------------------------------
+
+    def check(self, rule: str, n: int = 1) -> None:
+        self.checked[rule] += n
+
+    def add(self, rule: str, where: str, detail: str) -> None:
+        self.violations.append(Violation(rule, where, detail))
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+    def merge(self, other: "AnalysisReport") -> None:
+        self.violations.extend(other.violations)
+        self.checked.update(other.checked)
+        self.vmem_table.extend(other.vmem_table)
+        self.census.update(other.census)
+        self.notes.extend(other.notes)
+
+    # -- queries -------------------------------------------------------
+
+    @property
+    def passed(self) -> bool:
+        return not self.violations
+
+    def counts(self) -> Dict[str, int]:
+        c: Counter = Counter(v.rule for v in self.violations)
+        return dict(sorted(c.items()))
+
+    def new_violations(self, baseline: Optional[set]) -> List[Violation]:
+        """Violations not waived by the baseline key set (rule, where)."""
+        if not baseline:
+            return list(self.violations)
+        return [v for v in self.violations if v.key not in baseline]
+
+    # -- JSON ----------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "passed": self.passed,
+            "violation_counts": self.counts(),
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+            "checked": dict(sorted(self.checked.items())),
+            "kernel_vmem": self.vmem_table,
+            "executable_census": self.census,
+            "notes": self.notes,
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=False)
+            f.write("\n")
+
+    def summary(self) -> str:
+        lines = [
+            "checked: " + ", ".join(
+                f"{r}={n}" for r, n in sorted(self.checked.items())),
+            f"kernel dispatches audited: {len(self.vmem_table)}",
+            "executables traced: "
+            f"{self.census.get('n_executables', 0)}",
+        ]
+        if self.violations:
+            lines.append(f"VIOLATIONS ({len(self.violations)}):")
+            lines += [f"  {v}" for v in self.violations]
+        else:
+            lines.append("no violations")
+        return "\n".join(lines)
+
+
+def load_baseline(path: str) -> set:
+    """Waiver keys from a previously committed ANALYSIS.json.
+
+    Corrupt/missing baselines waive nothing (fail closed): diff mode then
+    degrades to strict mode rather than silently passing everything.
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return {(v["rule"], v["where"]) for v in data.get("violations", [])}
+    except (OSError, ValueError, KeyError, TypeError):
+        return set()

@@ -1,0 +1,348 @@
+"""Trace auditor: lower the serve-path executables to jaxprs and prove
+the invariants the AOT serving story rests on.
+
+Entry points audited (built from a real reduced config, packed weights
+and both cache layouts -- the same graphs serve.py/scheduler.py compile):
+
+- ``prefill``, ``decode_step``, ``verify_step`` (contiguous cache)
+- ``prefill_into_slot`` and the paged ``decode_step`` /
+  ``prefill_chunk_into_slot`` slot helpers
+- the scheduler's whole while-loop (harvest/admit/step switch inside a
+  ``lax.while_loop``, exactly as ``_build_loop`` stages it)
+
+Rules:
+
+- TRACE-F64        no 64-bit aval anywhere in a serve jaxpr (a single
+  weak-type promotion doubles decode bandwidth silently).
+- TRACE-HOST-SYNC  no callback/infeed/transfer primitive inside the
+  executables, *especially* under while/scan/cond bodies -- one host
+  round-trip per decode iteration is the difference between an AOT loop
+  and a python loop.
+- TRACE-DONATION   buffers declared donated actually alias an output in
+  the lowered HLO (``tf.aliasing_output``) -- a silently-dropped
+  donation doubles the KV-cache footprint.
+- TRACE-STATIC-HASH / TRACE-STATIC-LEAK  every static field (ModelConfig,
+  DeploymentPlan, packed-weight meta) hashes, and no traced array leaked
+  into a static meta position (either one means a recompile per call or
+  a crash at dispatch).
+
+Plus the recompile-key census: how many distinct executables and
+distinct packed static signatures one config compiles to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .report import AnalysisReport
+
+# primitives whose presence in a serve executable means a host sync or
+# transfer at run time
+HOST_SYNC_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+    "device_put",
+})
+
+_64BIT = frozenset({"float64", "int64", "uint64", "complex128"})
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, Any]]:
+    """(context, jaxpr) pairs nested in one equation's params."""
+    out = []
+    for k, v in eqn.params.items():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vs:
+            j = getattr(item, "jaxpr", None)
+            if j is not None and hasattr(j, "eqns"):
+                out.append((f"{eqn.primitive.name}.{k}", j))
+            elif hasattr(item, "eqns"):
+                out.append((f"{eqn.primitive.name}.{k}", item))
+    return out
+
+
+def walk_jaxpr(jaxpr, visit: Callable[[Any, Tuple[str, ...]], None],
+               path: Tuple[str, ...] = ()) -> None:
+    """Depth-first over every equation; ``path`` names the enclosing
+    control-flow contexts (e.g. ('while.body_jaxpr', 'scan.jaxpr'))."""
+    for eqn in jaxpr.eqns:
+        visit(eqn, path)
+        for ctx, sub in _sub_jaxprs(eqn):
+            walk_jaxpr(sub, visit, path + (ctx,))
+
+
+def check_no_f64(name: str, jaxpr, report: AnalysisReport) -> None:
+    report.check("TRACE-F64")
+    hits: Dict[str, str] = {}
+
+    def visit(eqn, path):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            dt = str(getattr(aval, "dtype", ""))
+            if dt in _64BIT and eqn.primitive.name not in hits:
+                hits[eqn.primitive.name] = dt
+
+    walk_jaxpr(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, visit)
+    for prim, dt in hits.items():
+        report.add("TRACE-F64", f"{name}:{prim}",
+                   f"{dt} value flows through `{prim}` -- a weak-type or "
+                   "x64 promotion doubled a serve-path buffer")
+
+
+def check_no_host_sync(name: str, jaxpr, report: AnalysisReport) -> None:
+    report.check("TRACE-HOST-SYNC")
+
+    def visit(eqn, path):
+        if eqn.primitive.name in HOST_SYNC_PRIMITIVES:
+            ctx = " > ".join(path) if path else "top level"
+            report.add(
+                "TRACE-HOST-SYNC", f"{name}:{eqn.primitive.name}",
+                f"host-sync primitive `{eqn.primitive.name}` at {ctx}"
+                + (" (inside a compiled loop body: one host round-trip "
+                   "per iteration)" if path else ""))
+
+    walk_jaxpr(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, visit)
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+def check_donation(name: str, fn, donate_argnums: Tuple[int, ...],
+                   args: tuple, report: AnalysisReport) -> None:
+    """Lower ``jit(fn, donate_argnums=...)`` and count aliased inputs.
+
+    XLA records an honored donation as a ``tf.aliasing_output`` input
+    attribute; every array leaf of a donated argument should carry one
+    (the serve path donates caches/carries whose every leaf round-trips
+    to an output).  Fewer aliases than donated leaves = buffers silently
+    copied every step.
+    """
+    report.check("TRACE-DONATION")
+    donated_leaves = sum(
+        len(jax.tree.leaves(args[i])) for i in donate_argnums)
+    text = jax.jit(fn, donate_argnums=donate_argnums).lower(*args).as_text()
+    aliased = text.count("tf.aliasing_output")
+    report.census.setdefault("donation", {})[name] = {
+        "donated_leaves": donated_leaves, "aliased_buffers": aliased}
+    if aliased < donated_leaves:
+        report.add(
+            "TRACE-DONATION", name,
+            f"{donated_leaves} leaves donated but only {aliased} aliased "
+            "an output -- the rest are copied every invocation")
+
+
+# ---------------------------------------------------------------------------
+# static keys
+# ---------------------------------------------------------------------------
+
+
+def _iter_static_meta(tree) -> List[Tuple[str, tuple]]:
+    """(leaf-type-name, meta-values) for every registered-dataclass leaf
+    carrying static metadata (PackedCimWeights & friends)."""
+    from ..core.engine import FusedPackedCimWeights, PackedCimWeights
+
+    found: List[Tuple[str, tuple]] = []
+
+    def visit(x):
+        if isinstance(x, PackedCimWeights):
+            found.append(("PackedCimWeights", (x.k_dim, x.n_dim, x.cfg)))
+        elif isinstance(x, FusedPackedCimWeights):
+            found.append(("FusedPackedCimWeights",
+                          (x.seg_names, x.seg_dims)))
+        return x
+
+    jax.tree.map(visit, tree,
+                 is_leaf=lambda x: isinstance(
+                     x, (PackedCimWeights, FusedPackedCimWeights)))
+    return found
+
+
+def check_static_keys(cfg, packed_params, report: AnalysisReport) -> None:
+    sites: List[Tuple[str, Any]] = [
+        ("ModelConfig", cfg),
+        ("DeploymentPlan", cfg.cim_plan),
+    ]
+    metas = _iter_static_meta(packed_params)
+    sites += [(f"{kind}[{i}]", meta) for i, (kind, meta) in enumerate(metas)]
+
+    for where, value in sites:
+        report.check("TRACE-STATIC-HASH")
+        try:
+            hash(value)
+        except TypeError as e:
+            report.add("TRACE-STATIC-HASH", where,
+                       f"static value unhashable ({e}) -- every dispatch "
+                       "through jit would fail or recompile")
+
+    report.check("TRACE-STATIC-LEAK", len(metas))
+    for i, (kind, meta) in enumerate(metas):
+        for field in jax.tree.leaves(meta,
+                                     is_leaf=lambda x: not isinstance(
+                                         x, (tuple, list))):
+            if isinstance(field, (jax.Array, np.ndarray)):
+                report.add(
+                    "TRACE-STATIC-LEAK", f"{kind}[{i}]",
+                    f"array of shape {getattr(field, 'shape', '?')} in a "
+                    "static meta position -- a traced value leaked into "
+                    "the treedef (recompile per call, unhashable key)")
+
+    # treedef of the packed tree is itself a jit cache key
+    report.check("TRACE-STATIC-HASH")
+    try:
+        hash(jax.tree.structure(packed_params))
+    except TypeError as e:
+        report.add("TRACE-STATIC-HASH", "packed-params treedef",
+                   f"treedef unhashable ({e})")
+
+    # recompile census: distinct static signatures = distinct executables
+    # one config can demand for its projections (an unhashable meta was
+    # already reported above; count it by repr so the census survives)
+    sigs = set()
+    for _, meta in metas:
+        try:
+            sigs.add(meta)
+        except TypeError:
+            sigs.add(repr(meta))
+    plan = cfg.cim_plan
+    report.census["recompile_keys"] = {
+        "packed_leaves": len(metas),
+        "distinct_packed_meta": len(sigs),
+        "plan_entries": len(plan.entries) if plan is not None else 0,
+        "distinct_plan_entries": (
+            len({e for _, e in plan.entries} | {plan.default})
+            if plan is not None else 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry-point assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeEntry:
+    name: str
+    fn: Callable
+    args: tuple
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_serve_entries(arch: str = "minicpm-2b",
+                        with_scheduler: bool = True
+                        ) -> Tuple[Any, Any, List[ServeEntry]]:
+    """Assemble the audited executables from a reduced cim-mode config
+    with a mixed-fidelity plan -- the same construction serve.py uses.
+
+    Returns (cfg, packed_params, entries).
+    """
+    from ..configs import get_config
+    from ..models import lm
+    from ..plan.plan import (DIGITAL_ENTRY, HYBRID_ENTRY, DeploymentPlan,
+                             PlanEntry)
+    from ..core.ccim import CCIMConfig
+
+    cfg = get_config(arch, smoke=True)
+    plan = DeploymentPlan.from_dict(
+        {"wo": DIGITAL_ENTRY,
+         "w2": PlanEntry(cfg=CCIMConfig(n_dcim_products=1, adc_bits=8))},
+        default=HYBRID_ENTRY)
+    cfg = dataclasses.replace(cfg, cim_mode=True, cim_plan=plan)
+    params = lm.init(jax.random.PRNGKey(0), cfg)[0]
+    packed = jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params)
+
+    B, P, S = 2, 8, 4
+    max_seq = 32
+    cache = lm.init_cache(cfg, B, max_seq)
+    pcache = lm.init_paged_cache(cfg, B, n_blocks=12, block_size=8,
+                                 n_tbl=6)
+    toks = jnp.zeros((B, P), jnp.int32)
+    tok1 = jnp.zeros((B, 1), jnp.int32)
+    vtoks = jnp.zeros((B, S), jnp.int32)
+    live = jnp.ones((B,), jnp.bool_)
+    slot = jnp.int32(0)
+    one_prompt = jnp.zeros((1, P), jnp.int32)
+
+    entries = [
+        ServeEntry("prefill",
+                   lambda p, t, c: lm.prefill(p, cfg, t, c),
+                   (packed, toks, cache)),
+        ServeEntry("decode_step",
+                   lambda p, t, c, lv: lm.decode_step(p, cfg, t, c, lv),
+                   (packed, tok1, cache, live), donate_argnums=(2,)),
+        ServeEntry("verify_step",
+                   lambda p, t, c, lv: lm.verify_step(p, cfg, t, c, lv),
+                   (packed, vtoks, cache, live), donate_argnums=(2,)),
+        ServeEntry("prefill_into_slot",
+                   lambda p, t, c, s: lm.prefill_into_slot(p, cfg, t, c, s),
+                   (packed, one_prompt, cache, slot), donate_argnums=(2,)),
+        ServeEntry("decode_step[paged]",
+                   lambda p, t, c, lv: lm.decode_step(p, cfg, t, c, lv),
+                   (packed, tok1, pcache, live), donate_argnums=(2,)),
+        ServeEntry("prefill_chunk_into_slot[paged]",
+                   lambda p, t, c, s: lm.prefill_chunk_into_slot(
+                       p, cfg, t, c, s),
+                   (packed, one_prompt, pcache, slot), donate_argnums=(2,)),
+    ]
+
+    if with_scheduler:
+        entries.append(_scheduler_loop_entry(cfg, packed))
+    return cfg, packed, entries
+
+
+def _scheduler_loop_entry(cfg, packed) -> ServeEntry:
+    """The whole-workload while-loop, staged exactly like
+    ``ContinuousBatchingScheduler._build_loop`` (cond + switch body)."""
+    from ..launch import scheduler as sched_mod
+
+    sched = sched_mod.ContinuousBatchingScheduler(
+        packed, cfg, slots=2, prompt_len=8, max_new_cap=4)
+    n_queue = 2
+    carry = sched._init_carry(n_queue)
+    qt = jnp.zeros((n_queue, sched._p_pad), jnp.int32)
+    qm = jnp.zeros((n_queue, sched_mod._QM_COLS), jnp.int32)
+    qp = jnp.zeros((n_queue, sched._n_pin_cols()), jnp.int32)
+
+    def serve_loop(params, c, q_toks, q_meta, q_pins):
+        def body(ci):
+            return sched._step_once(params, ci, q_toks, q_meta, q_pins,
+                                    n_queue)[0]
+
+        def cond(ci):
+            return (jnp.any(sched._occupied(ci["st"]))
+                    | (ci["q_head"] < n_queue))
+
+        return jax.lax.while_loop(cond, body, c)
+
+    return ServeEntry("scheduler_loop", serve_loop,
+                      (packed, carry, qt, qm, qp))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def audit_serve_path(report: AnalysisReport, arch: str = "minicpm-2b",
+                     with_scheduler: bool = True) -> None:
+    cfg, packed, entries = build_serve_entries(arch, with_scheduler)
+    for e in entries:
+        jaxpr = jax.make_jaxpr(e.fn)(*e.args)
+        check_no_f64(e.name, jaxpr, report)
+        check_no_host_sync(e.name, jaxpr, report)
+        if e.donate_argnums:
+            check_donation(e.name, e.fn, e.donate_argnums, e.args, report)
+    check_static_keys(cfg, packed, report)
+    report.census["n_executables"] = len(entries)
+    report.census["entry_points"] = [e.name for e in entries]
+    report.census["arch"] = arch

@@ -21,8 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from . import ccim
 from .ccim import CCIMConfig, DEFAULT_CONFIG, MacroInstance
-from .engine import (PackedComplexCimWeights, pack_complex_cim_weights)
+from .engine import PackedComplexCimWeights
 
 Array = jax.Array
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Iterator, Optional
 
 import numpy as np
 

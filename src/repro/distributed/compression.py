@@ -13,7 +13,7 @@ re-associated by the compiler.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

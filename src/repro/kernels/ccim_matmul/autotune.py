@@ -45,6 +45,64 @@ def cache_path() -> str:
     return os.path.abspath(os.environ.get(_ENV_VAR, _DEFAULT_PATH))
 
 
+def _key_dims(key: str) -> Dict[str, int]:
+    """Shape fields encoded in a cache key: K512 -> {'K': 512} etc."""
+    dims: Dict[str, int] = {}
+    for part in key.split("|"):
+        if len(part) > 1 and part[0].isalpha() and part[1:].isdigit():
+            dims[part[0]] = int(part[1:])
+    return dims
+
+
+def entry_violation(key: str, entry: dict) -> Optional[str]:
+    """Why a cached entry would select an illegal schedule, or None.
+
+    The same legality screen the kernel dispatchers apply (block
+    divisibility, sublane/accumulate alignment, the skinny VMEM
+    residency budget), run at LOAD time -- a stale or hand-edited
+    TUNING_CACHE entry is dropped here instead of steering a dispatch
+    into a block shape the kernel would reject (or worse, pad wrong).
+    Unknown ops pass: new tunables must not be invalidated by an old
+    loader.
+    """
+    if not isinstance(entry, dict):
+        return "entry is not an object"
+    parts = key.split("|")
+    op = parts[1] if len(parts) > 1 else ""
+    dims = _key_dims(key)
+    if op == "skinny_pallas":
+        from .ops import SKINNY_VMEM_BUDGET
+        try:
+            bn, bk = int(entry["bn"]), int(entry["bk"])
+        except (KeyError, TypeError, ValueError):
+            return "missing/non-integer (bn, bk)"
+        Kp, Np, L, P = (dims.get(d, 0) for d in "KNLP")
+        if bn <= 0 or bk <= 0:
+            return f"non-positive blocks ({bn}, {bk})"
+        if Np % bn:
+            return f"bn {bn} does not divide N {Np}"
+        if Kp % bk:
+            return f"bk {bk} does not divide K {Kp}"
+        if L and bk % L:
+            return f"bk {bk} not a multiple of acc_len {L}"
+        if bk % 32:
+            return f"bk {bk} not a multiple of the int8 sublane (32)"
+        if bn % 128:
+            return f"bn {bn} not lane-aligned (128)"
+        if max(P, 1) * Kp * bn > SKINNY_VMEM_BUDGET:
+            return (f"resident planes {max(P, 1)}x{Kp}x{bn} exceed the "
+                    f"{SKINNY_VMEM_BUDGET} B skinny VMEM budget")
+    elif op == "fast_gemm":
+        C = dims.get("C", 0)
+        try:
+            cb = int(entry["chunk_block"])
+        except (KeyError, TypeError, ValueError):
+            return "missing/non-integer chunk_block"
+        if cb < 1 or (C and cb > C):
+            return f"chunk_block {cb} outside [1, {C}]"
+    return None
+
+
 def _entries() -> Dict[str, dict]:
     path = cache_path()
     if _state["entries"] is None or _state["path"] != path:
@@ -69,6 +127,16 @@ def _entries() -> Dict[str, dict]:
                 warnings.warn(
                     f"ignoring malformed tuning cache {path}: expected "
                     "{'version': ..., 'entries': {...}}")
+        bad = {k: entry_violation(k, v) for k, v in entries.items()}
+        bad = {k: why for k, why in bad.items() if why}
+        if bad:
+            # same rationale as the corrupt-file path: an illegal block
+            # is a perf knob gone stale, never worth a wrong dispatch
+            warnings.warn(
+                f"dropping {len(bad)} illegal tuning cache entr"
+                f"{'y' if len(bad) == 1 else 'ies'}: "
+                + "; ".join(f"{k} ({why})" for k, why in sorted(bad.items())))
+            entries = {k: v for k, v in entries.items() if k not in bad}
         _state["path"], _state["entries"] = path, entries
     return _state["entries"]  # type: ignore[return-value]
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, Optional
+from typing import Optional
 
 PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
 HBM_BW = 819e9           # B/s / chip

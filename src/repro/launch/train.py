@@ -19,15 +19,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import checkpoint as ckpt
 from ..configs import ARCHS, get_config
 from ..data import DataConfig, batch_at
-from ..distributed import sharding as shd
 from ..models import lm
-from ..optim import OptConfig, init_opt_state
-from .specs import make_train_step, param_shapes_and_axes
+from ..optim import init_opt_state
+from .specs import make_train_step
 
 
 def train(arch: str, smoke: bool = True, steps: int = 50,

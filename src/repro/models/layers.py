@@ -14,7 +14,6 @@ Projection weights may be prepacked ``PackedCimWeights`` (see
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import zlib
 from functools import partial
@@ -773,7 +772,6 @@ def moe_apply(p: Params, x: Array, cfg: ModelConfig,
 def mamba2_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
     D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     W = cfg.ssm_conv_width
-    conv_ch = DI + 2 * N
     ks = jax.random.split(key, 8)
     p, a = {}, {}
     # component projections (not one fused in_proj): each output dim is

@@ -31,13 +31,11 @@ Families:
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.engine import FusedPackedCimWeights
 from . import layers as L
@@ -665,7 +663,6 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
     steps until its next chunk).
     """
     x = jnp.take(params["embed"], token, axis=0)
-    B = x.shape[0]
     pos = cache["pos"]
     positions = pos[:, None].astype(jnp.int32)
     cache = dict(cache)
@@ -791,17 +788,22 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
 
     for g in range(n_groups):
         x, (s_ssm, s_cx, s_cbc) = run_group(x, g * period, (g + 1) * period)
-        new_ssm.append(s_ssm); new_cx.append(s_cx); new_cbc.append(s_cbc)
+        new_ssm.append(s_ssm)
+        new_cx.append(s_cx)
+        new_cbc.append(s_cbc)
         x, kv, _ = _attn_block(
             params["shared"], x, cfg, positions, jnp.bool_(False),
             kv=(cache["shared_k"][g], cache["shared_v"][g]),
             cache_pos=pos if (decode or chunked) else jnp.zeros_like(pos),
             prefix="shared/", block_table=tbl, write_mask=write_mask)
-        new_k.append(kv[0]); new_v.append(kv[1])
+        new_k.append(kv[0])
+        new_v.append(kv[1])
         done = (g + 1) * period
     if done < cfg.n_layers:
         x, (s_ssm, s_cx, s_cbc) = run_group(x, done, cfg.n_layers)
-        new_ssm.append(s_ssm); new_cx.append(s_cx); new_cbc.append(s_cbc)
+        new_ssm.append(s_ssm)
+        new_cx.append(s_cx)
+        new_cbc.append(s_cbc)
     cache["ssm"] = jnp.concatenate(new_ssm, axis=0)
     cache["conv_x"] = jnp.concatenate(new_cx, axis=0)
     cache["conv_bc"] = jnp.concatenate(new_cbc, axis=0)

@@ -1,8 +1,6 @@
 """Per-assigned-architecture smoke tests: REDUCED config of the same
 family, one forward/train step on CPU, output shapes + no NaNs (the FULL
 configs are exercised only via the dry-run)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import ccim as core_ccim
-from repro.core.complex_mac import complex_cim_matmul, complex_cim_matmul_int
+from repro.core.complex_mac import complex_cim_matmul_int
 from repro.kernels.ccim_complex import (ccim_complex_matmul,
                                         ccim_complex_matmul_int,
                                         ccim_complex_matmul_pallas,

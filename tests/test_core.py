@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -10,7 +9,7 @@ except ModuleNotFoundError:  # [test] extra absent: fixed-grid fallback
     from _prop_fallback import given, settings, st
 
 from repro.core import (
-    CCIMConfig, DEFAULT_CONFIG, baselines, cim_matmul, cim_matmul_int,
+    DEFAULT_CONFIG, baselines, cim_matmul, cim_matmul_int,
     complex_cim_matmul, contribution_table, costmodel, fabricate,
     hybrid_mac_bit_true, hybrid_mac_fast, hybrid_mac_ideal, ideal_macro,
     quantize_smf, sar_adc, smf_scale,

@@ -9,7 +9,7 @@ except ModuleNotFoundError:  # [test] extra absent: fixed-grid fallback
     from _prop_fallback import given, settings, st
 
 from repro.data import DataConfig, Prefetcher, batch_at
-from repro.optim import (OptConfig, adamw_update, global_norm,
+from repro.optim import (OptConfig, adamw_update,
                          init_opt_state, warmup_cosine, wsd)
 
 DCFG = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)

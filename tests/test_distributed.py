@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed import (compressed_psum_mean, dp_axes, param_specs,
-                               spec_for)
+from repro.distributed import compressed_psum_mean, dp_axes, spec_for
 from repro.distributed.compression import (make_compressed_grad_allreduce,
                                             shard_map)
 
@@ -102,7 +101,8 @@ def test_error_feedback_reduces_bias_over_steps():
 
     for _ in range(50):
         mean, e = run(g, e)
-        acc_true += float(g[0]) ; acc_comp += float(mean[0])
+        acc_true += float(g[0])
+        acc_comp += float(mean[0])
     assert abs(acc_comp - acc_true) / acc_true < 0.05
 
 

@@ -11,7 +11,7 @@ import pytest
 
 from repro import checkpoint as ckpt
 from repro.core import (
-    CCIMConfig, CimEngine, DEFAULT_CONFIG, PackedCimWeights,
+    CimEngine, DEFAULT_CONFIG, PackedCimWeights,
     cim_linear, cim_linear_packed, cim_matmul, cim_matmul_int,
     complex_cim_matmul, fabricate, pack_cim_weights,
     pack_complex_cim_weights,

@@ -209,7 +209,7 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
     assert at.tuned_chunk_block(256, 64, 256, 16) == 16
     entry = at.autotune_chunk_block(4, 256, 64, iters=1)
     assert entry["chunk_block"] in [int(c) for c in entry["candidates_us"]]
-    path = at.save()
+    at.save()
     at._state["entries"] = None          # force reload from disk
     at.tuned_chunk_block.cache_clear()
     assert at.tuned_chunk_block(4, 16, 64, 16) == entry["chunk_block"]

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import ARCHS, get_config
 from repro.launch import hlo_analysis
 from repro.launch.specs import (SHAPES, applicable, batch_specs,
-                                make_train_step, param_count,
+                                param_count,
                                 param_shapes_and_axes)
 
 

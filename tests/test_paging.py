@@ -9,8 +9,6 @@ never a single token.  Every scheduler test compares the paged pool
 contiguous scheduler or a paged reference run and asserts BIT-identical
 tokens, greedy and sampled.
 """
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
@@ -21,7 +19,7 @@ except ImportError:                                   # pragma: no cover
     from _prop_fallback import given, settings, st
 
 from repro.configs import get_config
-from repro.launch.paging import (BlockAllocator, PagedLayout, cdiv,
+from repro.launch.paging import (BlockAllocator, PagedLayout,
                                  contiguous_kv_bytes, plan_prefix_sharing)
 from repro.launch.scheduler import ContinuousBatchingScheduler, Request
 from repro.models import lm

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.launch.scheduler import (ContinuousBatchingScheduler, Request,
+from repro.launch.scheduler import (ContinuousBatchingScheduler,
                                     mixed_length_requests, sampling_key)
 from repro.launch.serve import serve, serve_continuous
 from repro.models import lm

@@ -57,7 +57,8 @@ def test_cim_execution_mode_end_to_end():
 
 def test_doa_application_beats_paper_bound():
     """Fig. S3: DOA estimation through the macro, < 4% RMSE vs software."""
-    import sys, os
+    import os
+    import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.figS3_doa import _estimate, _music_spectrum, _steering
     rng = np.random.default_rng(3)

@@ -1,8 +1,5 @@
 """End-to-end training/serving drivers (smoke-scale)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.serve import serve
 from repro.launch.train import train
