@@ -60,6 +60,7 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batches=(2, 4),
         emit(f"tune.{name}", entry["us"], detail)
     path = autotune.save()
     print(f"# wrote {path} ({len(results)} entries, arch {arch})")
+    print(f"# {autotune.cache_summary()}")
     return path
 
 

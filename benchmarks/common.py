@@ -46,9 +46,17 @@ def record(op: str, shape, us, speedup_vs_prev=None, note: str = "",
     ))
 
 
+def bench_header() -> dict:
+    """Schema version + host fingerprint every BENCH_*.json must carry:
+    wall-clock rows are only a trajectory point relative to the host that
+    produced them."""
+    from repro.obs import BENCH_SCHEMA_VERSION, host_fingerprint
+    return dict(schema_version=BENCH_SCHEMA_VERSION, host=host_fingerprint())
+
+
 def write_bench_json(path: str = _BENCH_JSON) -> str:
     """Dump accumulated records so later PRs have a perf trajectory."""
     with open(path, "w") as f:
-        json.dump(dict(records=_RECORDS), f, indent=2)
+        json.dump(dict(**bench_header(), records=_RECORDS), f, indent=2)
         f.write("\n")
     return path

@@ -115,7 +115,12 @@ def run_arch(arch: str, smoke: bool, batch: int, prompt_len: int, gen: int,
 
 def run(smoke: bool = True, batch: int = 2, prompt_len: int = 16,
         gen: int = 16, archs=BENCH_ARCHS, path: str = _BENCH_JSON) -> dict:
-    result = dict(config=dict(smoke=smoke, batch=batch,
+    try:
+        from .common import bench_header
+    except ImportError:
+        from common import bench_header
+    result = dict(**bench_header(),
+                  config=dict(smoke=smoke, batch=batch,
                               prompt_len=prompt_len, gen=gen,
                               archs=list(archs)),
                   archs={})

@@ -69,6 +69,15 @@ _PAGED_ISO_TOK_S = 0.8
 # pool's worst-iteration/median-decode-step stall factor may not exceed
 # the contiguous pool's (whole-prompt admits) by more than this slack
 _STALL_RATIO_SLACK = 1.25
+# device-resident telemetry overhead gate: the metrics-on serve loop may
+# not fall below this fraction of the metrics-off throughput (best of
+# interleaved warm repeats, same process/host so the ratio cancels
+# machine speed and one-sided scheduler noise)
+_OBS_OVERHEAD_FLOOR = 0.95
+# Prometheus exposition written next to BENCH_serve.json (uploaded as a
+# CI artifact)
+_METRICS_PROM = os.path.join(os.path.dirname(__file__), "..",
+                             "OBS_metrics.prom")
 
 
 def _median_rate(row: dict) -> float:
@@ -186,6 +195,38 @@ def check_regression(new: dict, baseline_path: str,
                     raise SystemExit(
                         f"multi-tenant {key} regressed: {mt[key]:.2f} is "
                         f">{tolerance:.0%} below committed {commit:.2f}")
+
+    tel = new.get("telemetry")
+    if tel is not None:
+        from repro.obs import host_matches
+        ratio = tel.get("on_off_tok_s_ratio")
+        print(f"# regression gate: telemetry on/off tok/s ratio "
+              f"{ratio:.3f} (floor {_OBS_OVERHEAD_FLOOR})")
+        if ratio is not None and ratio < _OBS_OVERHEAD_FLOOR:
+            raise SystemExit(
+                f"device-resident telemetry overhead blew its budget: "
+                f"metrics-on throughput is {ratio:.3f}x metrics-off "
+                f"(floor {_OBS_OVERHEAD_FLOOR}x)")
+        base_tel = base.get("telemetry")
+        base_fps = (base_tel or {}).get("fingerprints_metrics_off", {})
+        if base_fps and host_matches(tel.get("host"),
+                                     (base_tel or {}).get("host")):
+            moved = {k: (v, tel["fingerprints_metrics_off"].get(k))
+                     for k, v in base_fps.items()
+                     if tel["fingerprints_metrics_off"].get(k) != v}
+            print(f"# regression gate: metrics-off HLO fingerprints "
+                  f"{'MOVED: ' + str(sorted(moved)) if moved else 'stable'} "
+                  f"({len(base_fps)} variants, host-matched)")
+            if moved:
+                raise SystemExit(
+                    f"metrics-off serve loop stopped lowering "
+                    f"byte-identically on a matching host -- some code "
+                    f"path now pays for telemetry while it is off: "
+                    f"{moved}")
+        elif base_fps:
+            print("# regression gate: metrics-off HLO fingerprints "
+                  "skipped (baseline host differs -- StableHLO is only "
+                  "comparable for a fixed backend/jax version)")
 
 
 def multi_tenant_trace(n_requests: int, max_prompt: int, vocab: int,
@@ -344,6 +385,126 @@ def run_multi_tenant(arch: str = "minicpm-2b", smoke: bool = True,
     return out
 
 
+def run_telemetry(arch: str = "minicpm-2b", smoke: bool = True,
+                  slots: int = 3, prompt_len: int = 128,
+                  max_prompt: int = 64, n_requests: int = 10,
+                  block_size: int = 8, prefill_chunk: int = 16,
+                  repeats: int = 3, seed: int = 0,
+                  prom_path: str = _METRICS_PROM) -> dict:
+    """Device-resident telemetry section: zero-overhead-when-off proof.
+
+    Runs the multi-tenant Poisson trace through the SAME paged scheduler
+    twice -- metrics off and metrics on -- and records (a) the sha256
+    StableHLO fingerprints of all three metrics-OFF serve-loop variants
+    (the byte-identity artifact --check-regression gates on), (b) the
+    on/off throughput ratio (the <=5%% overhead budget), (c) bit-exact
+    token parity, and (d) the ring-derived TTFT against the instrumented
+    runner's host-observed first_iter -- the rings must not merely look
+    plausible, they must agree exactly with the per-iteration ground
+    truth.  The metrics-on run's registry snapshot is exported as a
+    Prometheus text exposition (the CI artifact)."""
+    import statistics as _stats
+
+    import jax
+    from repro.configs import get_config
+    from repro.launch.paging import PagedLayout, cdiv
+    from repro.launch.scheduler import ContinuousBatchingScheduler
+    from repro.models import lm
+    from repro.obs import (REGISTRY, ObsConfig, host_fingerprint,
+                           scheduler_fingerprint)
+    from repro.obs.fingerprint import VARIANTS
+
+    cfg = get_config(arch, smoke=smoke)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    cap = 12
+    reqs, arrivals = multi_tenant_trace(n_requests, max_prompt,
+                                        cfg.vocab_size, block_size,
+                                        seed=seed)
+    lay = PagedLayout(block_size=block_size,
+                      n_tbl=cdiv(prompt_len + cap, block_size),
+                      n_blocks=2 * slots * cdiv(max_prompt + cap,
+                                                block_size) + 8)
+    kw = dict(slots=slots, prompt_len=prompt_len, max_new_cap=cap,
+              seed=seed, paged=lay, prefill_chunk=prefill_chunk,
+              prefix_sharing=True)
+    off = ContinuousBatchingScheduler(params, cfg, **kw)
+    on = ContinuousBatchingScheduler(params, cfg, obs=ObsConfig(), **kw)
+
+    # metrics-off serve loops must lower byte-identically forever: hash
+    # the pre-optimization StableHLO of every variant (small queue -- the
+    # fingerprint covers the program, not the workload size)
+    def variant(name):
+        if name == "paged":
+            return off
+        kw2 = dict(slots=2, prompt_len=16, max_new_cap=4, seed=seed)
+        if name == "speculative":
+            kw2["draft_k"] = 2
+        return ContinuousBatchingScheduler(params, cfg, **kw2)
+    fps = {name: scheduler_fingerprint(variant(name), 2)
+           for name in VARIANTS}
+
+    # one warm run each (pays compile outside the timed window), then
+    # interleave the timed repeats so host drift hits both sides alike;
+    # gate on best-of-repeats -- noise on a shared host only ever
+    # subtracts throughput, so max-of-N estimates each loop's true rate
+    off_runs = [off.run(reqs, arrivals)]
+    on_runs = [on.run(reqs, arrivals)]
+    for _ in range(repeats):
+        off_runs.append(off.run(reqs, arrivals))
+        on_runs.append(on.run(reqs, arrivals))
+    want = off_runs[0].tokens_by_rid()
+    for r in off_runs[1:] + on_runs:
+        got = r.tokens_by_rid()
+        for rid in want:
+            np.testing.assert_array_equal(
+                got[rid], want[rid],
+                err_msg=f"request {rid}: telemetry rings changed tokens")
+    off_med = _stats.median(r.tok_s for r in off_runs[1:])
+    on_med = _stats.median(r.tok_s for r in on_runs[1:])
+    off_best = max(r.tok_s for r in off_runs[1:])
+    on_best = max(r.tok_s for r in on_runs[1:])
+    ratio = on_best / off_best if off_best else float("nan")
+
+    # ring truth: TTFT read back from the device event ring must equal
+    # the instrumented runner's host-stepped first_iter, request by request
+    ri, _ = on.run_instrumented(reqs, arrivals)
+    ring_ttft = on_runs[0].obs.ttft_iters
+    inst_ttft = {f.rid: f.first_iter for f in ri.finished}
+    assert ring_ttft == inst_ttft, \
+        f"ring TTFT diverged from instrumented: {ring_ttft} vs {inst_ttft}"
+
+    snap = max(on_runs, key=lambda r: r.tok_s).obs
+    snap.register(REGISTRY)
+    from repro.kernels.ccim_matmul.autotune import cache_summary
+    tuning = cache_summary()
+    with open(prom_path, "w") as f:
+        f.write(REGISTRY.export_prometheus())
+    out = dict(
+        fingerprints_metrics_off=fps,
+        host=host_fingerprint(),
+        tok_s_off_median=round(off_med, 2),
+        tok_s_on_median=round(on_med, 2),
+        tok_s_off_best=round(off_best, 2),
+        tok_s_on_best=round(on_best, 2),
+        on_off_tok_s_ratio=round(ratio, 3),
+        tokens_bit_identical=True,
+        ring_ttft_matches_instrumented=True,
+        tuning_cache=tuning,
+        snapshot=snap.to_dict(),
+        prom_path=os.path.relpath(prom_path,
+                                  os.path.join(os.path.dirname(__file__),
+                                               "..")),
+    )
+    print(f"# telemetry: on/off tok/s ratio {ratio:.3f} "
+          f"(best {on_best:.1f}/{off_best:.1f}, median {on_med:.1f}/"
+          f"{off_med:.1f}), tokens identical, ring TTFT == "
+          f"instrumented; metrics-off fingerprints "
+          f"{ {k: v[:12] for k, v in fps.items()} }")
+    print(f"# telemetry: Prometheus exposition -> {prom_path}")
+    print(f"# {tuning}")
+    return out
+
+
 def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
         prompt_len: int = 16, gen: int = 48, repeats: int = 3,
         draft_k: int = 8, path: str = _BENCH_JSON, gate: bool = False,
@@ -453,7 +614,12 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
             speedup_vs_nonspec_cb=round(st["tok_s_median"] / nonspec_med, 2),
             tokens_match_lockstep=st["tokens_match_lockstep"]))
 
+    try:
+        from .common import bench_header
+    except ImportError:
+        from common import bench_header
     result = dict(
+        **bench_header(),
         config=dict(arch=arch, smoke=smoke, batch=batch,
                     prompt_len=prompt_len, gen=gen, repeats=repeats,
                     draft_k=draft_k),
@@ -472,6 +638,12 @@ def run(arch: str = "minicpm-2b", smoke: bool = True, batch: int = 2,
     if multi_tenant:
         result["multi_tenant"] = run_multi_tenant(
             arch, smoke=smoke, repeats=max(repeats, 3))
+    # 8 timed repeats: the overhead gate compares best-of-N of two
+    # ~100ms loops, and small N lets one lucky draw on either side move
+    # the ratio past the floor (observed swing at N=3-5: 0.93-1.01 for
+    # a true ratio of ~1.0)
+    result["telemetry"] = run_telemetry(arch, smoke=smoke,
+                                        repeats=max(repeats, 8))
     if gate:
         check_regression(result, path)
     with open(path, "w") as f:
@@ -521,8 +693,10 @@ def main():
                          "committed BENCH_serve.json (packed/fp ratio), the "
                          "speculative speedup fell below its floor, draft "
                          "acceptance dropped on the committed sweep point, "
-                         "or the paged KV pool missed its multi-tenant "
-                         "throughput/footprint/stall gates")
+                         "the paged KV pool missed its multi-tenant "
+                         "throughput/footprint/stall gates, a metrics-off "
+                         "serve-loop HLO fingerprint moved on a matching "
+                         "host, or telemetry overhead exceeded its budget")
     ap.add_argument("--multi-tenant", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="include the paged-vs-contiguous multi-tenant "

@@ -129,3 +129,25 @@ print(f"speculative decode: {spec['decode_speedup_speculative']}x vs "
 # examples/cim_serve.py for a running pool and DESIGN.md §11 for the
 # allocator/pinning/rollback semantics.
 from repro.launch.paging import PagedLayout  # noqa: F401  (see cim_serve.py)
+
+# --- telemetry: what did the serve loop actually do? ----------------------
+# metrics=True compiles a SEPARATE executable whose while-loop carry
+# threads fixed-size event/iteration rings (tokens stay bit-identical;
+# the metrics-off program is byte-identical to a build without the
+# telemetry code).  The harvested rings land in the stats dict next to
+# a Prometheus-style registry snapshot and the span trace of this very
+# pack/compile/serve sequence.
+import json
+
+from repro.launch.serve import serve_continuous
+from repro.obs import REGISTRY
+
+_, st = serve_continuous("minicpm-2b", n_requests=4, slots=2, prompt_len=16,
+                         stop_lengths=(4, 8, 6, 8), metrics=True)
+tel = st["telemetry"]
+print(f"\ntelemetry: {tel['counters']['tokens']} tokens over "
+      f"{tel['n_iter']} loop iterations, occupancy "
+      f"{tel['occupancy_mean']:.2f}, ttft p50 {tel['ttft_p50_iters']:.0f} "
+      "iters")
+print("per-request spans:", json.dumps(tel["spans"][0]))
+print(REGISTRY.export_prometheus().splitlines()[0], "...")

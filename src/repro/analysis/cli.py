@@ -9,7 +9,7 @@ Modes:
                                             (committed waivers don't block)
 
 Sections can be skipped (``--skip trace``) for fast iteration; the CI
-gate runs all three.
+gate runs all of them.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ from typing import Optional, Sequence
 
 from .report import AnalysisReport, load_baseline
 
-SECTIONS = ("lint", "kernels", "trace")
+SECTIONS = ("lint", "kernels", "trace", "obs")
 _PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -38,6 +38,9 @@ def run_analysis(sections: Sequence[str] = SECTIONS,
     if "trace" in sections:
         from .tracer import audit_serve_path
         audit_serve_path(report, arch=arch, with_scheduler=with_scheduler)
+    if "obs" in sections:
+        from .obs_rules import audit_obs
+        audit_obs(report, arch=arch)
     return report
 
 

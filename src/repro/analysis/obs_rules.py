@@ -1,0 +1,102 @@
+"""Telemetry (obs) rules: the device rings must stay free.
+
+The scheduler's metrics-on serve loop threads fixed-size event rings and
+counter arrays through the ``lax.while_loop`` carry (obs/rings.py).  Two
+properties make that telemetry safe to leave on in production, and both
+are checkable from the lowered program -- so they are lint rules, not
+review comments:
+
+- OBS-RING-DONATION  the obs state enters the whole-workload executable
+  as its own donated argument, and every ring leaf must actually alias
+  an output (``tf.aliasing_output`` in the lowered HLO).  A silently
+  dropped donation re-allocates every ring each workload and -- for the
+  iteration ring, the largest leaf -- doubles the telemetry footprint.
+- OBS-HOST-SYNC      with metrics ON the loop body must still contain no
+  host callback / infeed / transfer primitive.  The rings exist
+  precisely so the loop keeps its single host sync; a callback-based
+  "metric" would reintroduce one round-trip per iteration.
+
+Both rules audit the REAL scheduler construction (``_lower_loop`` with
+``obs=ObsConfig()``), the same lowering ``compile_for`` executes.
+"""
+from __future__ import annotations
+
+from .report import AnalysisReport
+from .tracer import HOST_SYNC_PRIMITIVES, walk_jaxpr
+
+
+def check_ring_donation(name: str, hlo_text: str, donated_leaves: int,
+                        report: AnalysisReport) -> None:
+    """Count honored aliases in a metrics-on lowering.
+
+    The obs subtree is the only donated argument of the whole-loop
+    executable, so every ``tf.aliasing_output`` attribute in the text
+    belongs to a ring leaf; fewer aliases than leaves means XLA dropped
+    part of the donation.
+    """
+    report.check("OBS-RING-DONATION")
+    aliased = hlo_text.count("tf.aliasing_output")
+    report.census.setdefault("obs_donation", {})[name] = {
+        "ring_leaves": donated_leaves, "aliased_buffers": aliased}
+    if aliased < donated_leaves:
+        report.add(
+            "OBS-RING-DONATION", name,
+            f"{donated_leaves} telemetry ring leaves donated but only "
+            f"{aliased} alias an output -- the rest are copied every "
+            "workload")
+
+
+def check_obs_host_sync(name: str, jaxpr, report: AnalysisReport) -> None:
+    """No host-sync primitive anywhere in a metrics-on serve jaxpr."""
+    report.check("OBS-HOST-SYNC")
+
+    def visit(eqn, path):
+        if eqn.primitive.name in HOST_SYNC_PRIMITIVES:
+            ctx = " > ".join(path) if path else "top level"
+            report.add(
+                "OBS-HOST-SYNC", f"{name}:{eqn.primitive.name}",
+                f"host-sync primitive `{eqn.primitive.name}` at {ctx} with "
+                "metrics on -- telemetry must ride the device rings, never "
+                "a callback")
+
+    walk_jaxpr(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, visit)
+
+
+def audit_obs(report: AnalysisReport, arch: str = "minicpm-2b") -> None:
+    """Lower the metrics-on scheduler loop and run both obs rules."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..launch import scheduler as sched_mod
+    from ..obs import ObsConfig
+    from ..obs.rings import OBS_LEAVES
+    from .tracer import reduced_cim_setup
+
+    cfg, packed = reduced_cim_setup(arch)
+    sched = sched_mod.ContinuousBatchingScheduler(
+        packed, cfg, slots=2, prompt_len=8, max_new_cap=4, obs=ObsConfig())
+    n_queue = 2
+
+    check_ring_donation("scheduler_loop[obs]",
+                        sched._lower_loop(n_queue).as_text(),
+                        len(OBS_LEAVES), report)
+
+    carry = sched._init_carry(n_queue)      # with_obs=True: rings inline
+    qt = jnp.zeros((n_queue, sched._p_pad), jnp.int32)
+    qm = jnp.zeros((n_queue, sched_mod._QM_COLS), jnp.int32)
+    qp = jnp.zeros((n_queue, sched._n_pin_cols()), jnp.int32)
+
+    def serve_loop(params, c, q_toks, q_meta, q_pins):
+        def body(ci):
+            return sched._step_once(params, ci, q_toks, q_meta, q_pins,
+                                    n_queue)[0]
+
+        def cond(ci):
+            return (jnp.any(sched._occupied(ci["st"]))
+                    | (ci["q_head"] < n_queue))
+
+        return jax.lax.while_loop(cond, body, c)
+
+    jaxpr = jax.make_jaxpr(serve_loop)(packed, carry, qt, qm, qp)
+    check_obs_host_sync("scheduler_loop[obs]", jaxpr, report)
+    report.census["obs_ring_leaves"] = list(OBS_LEAVES)

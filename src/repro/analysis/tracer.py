@@ -238,14 +238,9 @@ class ServeEntry:
     donate_argnums: Tuple[int, ...] = ()
 
 
-def build_serve_entries(arch: str = "minicpm-2b",
-                        with_scheduler: bool = True
-                        ) -> Tuple[Any, Any, List[ServeEntry]]:
-    """Assemble the audited executables from a reduced cim-mode config
-    with a mixed-fidelity plan -- the same construction serve.py uses.
-
-    Returns (cfg, packed_params, entries).
-    """
+def reduced_cim_setup(arch: str = "minicpm-2b") -> Tuple[Any, Any]:
+    """(cfg, packed_params) for the audited reduced cim-mode config with
+    a mixed-fidelity plan -- the same construction serve.py uses."""
     from ..configs import get_config
     from ..models import lm
     from ..plan.plan import (DIGITAL_ENTRY, HYBRID_ENTRY, DeploymentPlan,
@@ -260,6 +255,20 @@ def build_serve_entries(arch: str = "minicpm-2b",
     cfg = dataclasses.replace(cfg, cim_mode=True, cim_plan=plan)
     params = lm.init(jax.random.PRNGKey(0), cfg)[0]
     packed = jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params)
+    return cfg, packed
+
+
+def build_serve_entries(arch: str = "minicpm-2b",
+                        with_scheduler: bool = True
+                        ) -> Tuple[Any, Any, List[ServeEntry]]:
+    """Assemble the audited executables from a reduced cim-mode config
+    with a mixed-fidelity plan -- the same construction serve.py uses.
+
+    Returns (cfg, packed_params, entries).
+    """
+    from ..models import lm
+
+    cfg, packed = reduced_cim_setup(arch)
 
     B, P, S = 2, 8, 4
     max_seq = 32

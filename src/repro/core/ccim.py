@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import taps
+
 Array = jax.Array
 
 # ---------------------------------------------------------------------------
@@ -589,6 +591,10 @@ def hybrid_mac_fast_gemm_prepacked(
 
     dyn_var = (cfg.comparator_noise_lsb * cfg.dcim_lsb) ** 2
     lsb, half = float(cfg.dcim_lsb), cfg.adc_half_range
+    # telemetry tap (obs/taps.py): count ADC codes the clip saturates.
+    # Trace-time flag -- with no collector open (telemetry off) the
+    # lowered program is unchanged
+    tap_clip = taps.active()
 
     def step(acc, inp, bmask=None):
         if noisy:
@@ -605,17 +611,26 @@ def hybrid_mac_fast_gemm_prepacked(
                 jnp.matmul(bxmc, bwmc) if n_j else 0.0)
             var = cfg.sigma_unit**2 * cfg.fast_noise_correction * a_mag
             a_real = a_real + jnp.sqrt(var + dyn_var) * bnoise
-        code = jnp.clip(jnp.floor(a_real / lsb + 0.5), -half, half - 1)
+        raw = jnp.floor(a_real / lsb + 0.5)
+        code = jnp.clip(raw, -half, half - 1)
         y8 = (dcim + code).astype(jnp.int32)
         if bmask is not None:
             y8 = y8 * bmask[:, None, None]
-        return acc + jnp.sum(y8, axis=0), None
+        clip = None
+        if tap_clip:
+            over = ((raw < -half) | (raw > half - 1)).astype(jnp.int32)
+            if bmask is not None:
+                over = over * bmask[:, None, None]    # phantom chunks
+            clip = jnp.sum(over)
+        return acc + jnp.sum(y8, axis=0), clip
 
     acc0 = jnp.zeros((M, wf.shape[-1]), jnp.int32)
     if n_blk == 1:
         # single step (the decode shape): no chunk-axis padding, blocking
         # reshapes or phantom-chunk mask -- the step runs on the raw ops
-        out, _ = step(acc0, tuple(ops))
+        out, clip = step(acc0, tuple(ops))
+        if tap_clip:
+            taps.emit("adc_clip", clip)
         return out
 
     # pad the chunk axis to the scan block; phantom chunks are masked so
@@ -632,12 +647,19 @@ def hybrid_mac_fast_gemm_prepacked(
         # loop-carry copies and trip machinery cost more than the math at
         # decode shapes (int32 partial sums -- order-identical to the scan)
         acc = acc0
+        clip = jnp.zeros((), jnp.int32)
         for i in range(n_blk):
-            acc, _ = step(acc, jax.tree_util.tree_map(lambda v: v[i], xs),
+            acc, c = step(acc, jax.tree_util.tree_map(lambda v: v[i], xs),
                           bmasks[i])
+            if tap_clip:
+                clip = clip + c
+        if tap_clip:
+            taps.emit("adc_clip", clip)
         return acc
-    out, _ = jax.lax.scan(lambda a, i: step(a, i[:-1], i[-1]), acc0,
-                          xs + (bmasks,))
+    out, clips = jax.lax.scan(lambda a, i: step(a, i[:-1], i[-1]), acc0,
+                              xs + (bmasks,))
+    if tap_clip:
+        taps.emit("adc_clip", jnp.sum(clips))
     return out
 
 

@@ -18,13 +18,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import taps
 from .ccim import CCIMConfig, DEFAULT_CONFIG, cim_matmul
 from .engine import PackedCimWeights, packed_cim_matmul
 
 Array = jax.Array
 
 
+def _cim_linear_impl(x, w, noise_key, cfg, fidelity, use_pallas,
+                     noise_segments):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = cim_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), cfg,
+                   noise_key=noise_key, fidelity=fidelity,
+                   use_pallas=use_pallas, noise_segments=noise_segments)
+    return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _cim_linear_ste(x: Array, w: Array, noise_key: Optional[Array],
+                    cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
+                    use_pallas: Optional[bool] = None,
+                    noise_segments: Optional[tuple] = None) -> Array:
+    return _cim_linear_impl(x, w, noise_key, cfg, fidelity, use_pallas,
+                            noise_segments)
+
+
+def _fwd(x, w, noise_key, cfg, fidelity, use_pallas, noise_segments):
+    return (_cim_linear_impl(x, w, noise_key, cfg, fidelity, use_pallas,
+                             noise_segments), (x, w))
+
+
+def _bwd(cfg, fidelity, use_pallas, noise_segments, res, g):
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
+    return gx, gw, None
+
+
+_cim_linear_ste.defvjp(_fwd, _bwd)
+
+
 def cim_linear(x: Array, w: Array, noise_key: Optional[Array],
                cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
                use_pallas: Optional[bool] = None,
@@ -35,28 +69,18 @@ def cim_linear(x: Array, w: Array, noise_key: Optional[Array],
     kernel (None = auto: only on a TPU backend).  ``noise_segments``
     (static) with a tuple of keys as ``noise_key`` draws per-segment
     noise streams for a fused projection group (models.layers).
+
+    With a telemetry tap collector open (obs/taps.py) the primal runs
+    WITHOUT the custom_vjp wrapper: custom_vjp traces its primal in a
+    sub-trace, so tap values emitted inside it would leak out as foreign
+    tracers.  The primal math is the same function either way, and the
+    serving loop (the only taps user) never differentiates.
     """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    y = cim_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), cfg,
-                   noise_key=noise_key, fidelity=fidelity,
-                   use_pallas=use_pallas, noise_segments=noise_segments)
-    return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
-
-
-def _fwd(x, w, noise_key, cfg, fidelity, use_pallas, noise_segments):
-    return (cim_linear(x, w, noise_key, cfg, fidelity, use_pallas,
-                       noise_segments), (x, w))
-
-
-def _bwd(cfg, fidelity, use_pallas, noise_segments, res, g):
-    x, w = res
-    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
-    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
-    return gx, gw, None
-
-
-cim_linear.defvjp(_fwd, _bwd)
+    if taps.active():
+        return _cim_linear_impl(x, w, noise_key, cfg, fidelity, use_pallas,
+                                noise_segments)
+    return _cim_linear_ste(x, w, noise_key, cfg, fidelity, use_pallas,
+                           noise_segments)
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +99,45 @@ def _zero_cotangent(tree):
     return jax.tree.map(z, tree)
 
 
+def _cim_linear_packed_impl(x, packed, noise_key, cfg, fidelity, use_pallas,
+                            noise_segments):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = packed_cim_matmul(x2.astype(jnp.float32), packed, cfg,
+                          noise_key=noise_key, fidelity=fidelity,
+                          use_pallas=use_pallas,
+                          noise_segments=noise_segments)
+    return y.reshape(*lead, packed.n_dim).astype(x.dtype)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _cim_linear_packed_ste(x: Array, packed: PackedCimWeights,
+                           noise_key: Optional[Array],
+                           cfg: CCIMConfig = DEFAULT_CONFIG,
+                           fidelity: str = "fast",
+                           use_pallas: Optional[bool] = None,
+                           noise_segments: Optional[tuple] = None) -> Array:
+    return _cim_linear_packed_impl(x, packed, noise_key, cfg, fidelity,
+                                   use_pallas, noise_segments)
+
+
+def _fwd_packed(x, packed, noise_key, cfg, fidelity, use_pallas,
+                noise_segments):
+    y = _cim_linear_packed_impl(x, packed, noise_key, cfg, fidelity,
+                                use_pallas, noise_segments)
+    return y, (x, packed)
+
+
+def _bwd_packed(cfg, fidelity, use_pallas, noise_segments, res, g):
+    x, packed = res
+    w_deq = packed.dequantized()
+    gx = jnp.einsum("...n,kn->...k", g, w_deq).astype(x.dtype)
+    return gx, _zero_cotangent(packed), None
+
+
+_cim_linear_packed_ste.defvjp(_fwd_packed, _bwd_packed)
+
+
 def cim_linear_packed(x: Array, packed: PackedCimWeights,
                       noise_key: Optional[Array],
                       cfg: CCIMConfig = DEFAULT_CONFIG, fidelity: str = "fast",
@@ -87,31 +149,15 @@ def cim_linear_packed(x: Array, packed: PackedCimWeights,
     pack was built from; backward uses the DEQUANTIZED packed weights
     (sign*mag*scale) -- the gradient the activations actually see through
     the frozen array, which is what error-recovery finetuning wants.
+
+    Like ``cim_linear``, an open tap collector routes around the
+    custom_vjp wrapper so ADC-clip telemetry can escape the primal.
     """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    y = packed_cim_matmul(x2.astype(jnp.float32), packed, cfg,
-                          noise_key=noise_key, fidelity=fidelity,
-                          use_pallas=use_pallas,
-                          noise_segments=noise_segments)
-    return y.reshape(*lead, packed.n_dim).astype(x.dtype)
-
-
-def _fwd_packed(x, packed, noise_key, cfg, fidelity, use_pallas,
-                noise_segments):
-    y = cim_linear_packed(x, packed, noise_key, cfg, fidelity, use_pallas,
-                          noise_segments)
-    return y, (x, packed)
-
-
-def _bwd_packed(cfg, fidelity, use_pallas, noise_segments, res, g):
-    x, packed = res
-    w_deq = packed.dequantized()
-    gx = jnp.einsum("...n,kn->...k", g, w_deq).astype(x.dtype)
-    return gx, _zero_cotangent(packed), None
-
-
-cim_linear_packed.defvjp(_fwd_packed, _bwd_packed)
+    if taps.active():
+        return _cim_linear_packed_impl(x, packed, noise_key, cfg, fidelity,
+                                       use_pallas, noise_segments)
+    return _cim_linear_packed_ste(x, packed, noise_key, cfg, fidelity,
+                                  use_pallas, noise_segments)
 
 
 def maybe_cim_linear(x: Array, w: Union[Array, PackedCimWeights],

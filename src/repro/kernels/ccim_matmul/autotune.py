@@ -45,6 +45,33 @@ def cache_path() -> str:
     return os.path.abspath(os.environ.get(_ENV_VAR, _DEFAULT_PATH))
 
 
+def _count(event: str, amount: int = 1) -> None:
+    """Tuning-cache outcome counters in the process metrics registry.
+
+    hit / miss label raw key lookups; fallback counts a consumer actually
+    settling for the built-in heuristic schedule (the formerly silent
+    path); dropped counts illegal entries discarded at load.  Lookups run
+    at trace time behind an lru_cache, so counts reflect distinct shapes
+    lowered, not decode steps.
+    """
+    from ...obs.metrics import REGISTRY
+    REGISTRY.counter("autotune_cache_events_total",
+                     "tuning-cache lookups by outcome",
+                     labels={"event": event}).inc(amount)
+
+
+def cache_summary() -> str:
+    """One-line cache-effectiveness report for benchmark logs."""
+    from ...obs.metrics import REGISTRY
+
+    def v(ev):
+        return int(REGISTRY.counter("autotune_cache_events_total",
+                                    labels={"event": ev}).value)
+    return (f"tuning cache {cache_path()}: {len(_entries())} entries | "
+            f"{v('hit')} hits, {v('miss')} misses, {v('fallback')} "
+            f"heuristic fallbacks, {v('dropped')} dropped illegal entries")
+
+
 def _key_dims(key: str) -> Dict[str, int]:
     """Shape fields encoded in a cache key: K512 -> {'K': 512} etc."""
     dims: Dict[str, int] = {}
@@ -137,12 +164,15 @@ def _entries() -> Dict[str, dict]:
                 f"{'y' if len(bad) == 1 else 'ies'}: "
                 + "; ".join(f"{k} ({why})" for k, why in sorted(bad.items())))
             entries = {k: v for k, v in entries.items() if k not in bad}
+            _count("dropped", len(bad))
         _state["path"], _state["entries"] = path, entries
     return _state["entries"]  # type: ignore[return-value]
 
 
 def lookup(key: str) -> Optional[dict]:
-    return _entries().get(key)
+    e = _entries().get(key)
+    _count("hit" if e is not None else "miss")
+    return e
 
 
 def update(key: str, entry: dict) -> None:
@@ -193,6 +223,7 @@ def tuned_chunk_block(M: int, C: int, N: int, acc_len: int) -> int:
     e = lookup(chunk_key(M, C, N, acc_len))
     if e is not None and "chunk_block" in e:
         return max(1, int(e["chunk_block"]))
+    _count("fallback")
     from ...core.ccim import _CHUNK_BLOCK, _SKINNY_M
     return C if M <= _SKINNY_M else _CHUNK_BLOCK
 
@@ -213,6 +244,7 @@ def tuned_skinny_blocks(K: int, N: int, acc_len: int,
     e = lookup(skinny_key(K, N, acc_len, n_planes))
     if e is not None and "bn" in e and "bk" in e:
         return int(e["bn"]), int(e["bk"])
+    _count("fallback")
     return None
 
 

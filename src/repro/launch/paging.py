@@ -257,6 +257,15 @@ class PrefixPlan:
     def n_shared_tokens(self) -> int:
         return int(np.sum(self.n_shared_blocks))
 
+    def stats(self) -> dict:
+        """Plan-level sharing summary for telemetry / bench rows."""
+        shared = self.share_src >= 0
+        return dict(n_requests=int(self.share_src.shape[0]),
+                    shared_requests=int(np.sum(shared)),
+                    shared_blocks=int(np.sum(self.n_shared_blocks)),
+                    pinned_blocks=int(np.sum(self.pin_counts > 0)),
+                    max_chain_depth=int(self.n_shared_blocks.max(initial=0)))
+
 
 def plan_prefix_sharing(prompts: Sequence[np.ndarray], block_size: int,
                         n_tbl: int, enable: bool = True) -> PrefixPlan:

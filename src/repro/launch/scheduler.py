@@ -89,6 +89,9 @@ import numpy as np
 
 from ..models import lm
 from ..models.config import ModelConfig
+from ..obs import taps
+from ..obs import rings as obs_rings
+from ..obs.rings import ObsConfig, ObsSnapshot
 from .paging import PagedLayout, cdiv, contiguous_kv_bytes, plan_prefix_sharing
 
 
@@ -131,6 +134,7 @@ class ServeReport:
     n_accepted: int = 0           # draft tokens accepted by verify
     n_pf: int = 0                 # chunked-prefill iterations (paged mode)
     peak_blocks: int = 0          # peak live pool blocks (paged mode)
+    obs: Optional[ObsSnapshot] = None   # harvested device rings (obs mode)
 
     @property
     def total_tokens(self) -> int:
@@ -259,6 +263,18 @@ class ContinuousBatchingScheduler:
     reproduces the argmax chain at any K); temperature sampling stays
     distribution-correct but the pool-vs-solo bit-equality holds only at
     FIXED draft_k (the rung schedule depends on poolmates' acceptance).
+
+    ``obs=ObsConfig(...)`` threads fixed-size telemetry rings through
+    the loop carry (obs/rings.py): per-request admit/first-token/finish
+    iteration stamps, per-iteration occupancy/token samples, and scalar
+    counters (ADC clips via obs/taps.py, prefix hits, free-list
+    low-water mark), all written with saturating masked scatters so the
+    loop still syncs the host exactly once.  Telemetry is a STATIC flag
+    compiling a SEPARATE executable: with ``obs=None`` the lowered
+    serve loop is byte-identical to the pre-telemetry program
+    (``loop_hlo_text`` exposes the text; serve_bench gates its sha256),
+    and with obs on the emitted tokens are bit-identical -- the rings
+    only read values the loop already computes (tests/test_obs.py).
     """
 
     def __init__(self, params, cfg: ModelConfig, slots: int, prompt_len: int,
@@ -267,7 +283,8 @@ class ContinuousBatchingScheduler:
                  paged: Optional[PagedLayout] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 adaptive_draft_k: bool = False):
+                 adaptive_draft_k: bool = False,
+                 obs: Optional[ObsConfig] = None):
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "scheduler is text-only for now (no per-request frontends)")
@@ -282,6 +299,7 @@ class ContinuousBatchingScheduler:
         if adaptive_draft_k and not draft_k:
             raise ValueError("adaptive_draft_k needs draft_k > 0")
         self.cfg, self.slots = cfg, slots
+        self.obs = obs
         self.prompt_len, self.cap = prompt_len, max_new_cap
         self.temperature, self.pad_token = temperature, pad_token
         self._base_key = sampling_key(seed)
@@ -559,6 +577,10 @@ class ContinuousBatchingScheduler:
             c["res_out"] = c["res_out"].at[qidx].set(st["out"][slot])
             c["res_n"] = c["res_n"].at[qidx].set(st["n_gen"][slot])
             c["res_iter"] = c["res_iter"].at[qidx].set(c["n_iter"])
+            if self.obs is not None:
+                o = obs_rings.ring_push(c["obs"], obs_rings.EV_FINISH,
+                                        q_meta[qidx, 0], c["n_iter"])
+                c["obs"] = dict(o, tick_tok=jnp.zeros((), jnp.int32))
             st = dict(st, pending=st["pending"].at[slot].set(False))
             if paged is not None:
                 # free the slot's grant: one ref off each of its first
@@ -583,12 +605,28 @@ class ContinuousBatchingScheduler:
                                            (1, self.prompt_len))
             rid, max_new, stop = (q_meta[qidx, 0], q_meta[qidx, 1],
                                   q_meta[qidx, 2])
-            st = self._arm_slot(params, st, slot, prompt, rid, max_new,
-                                stop)
+            upd = {}
+            if self.obs is not None:
+                with taps.collect() as fr:
+                    st = self._arm_slot(params, st, slot, prompt, rid,
+                                        max_new, stop)
+                # the whole-prompt prefill samples the first token here:
+                # admit and first-token land on the same iteration stamp
+                o = obs_rings.ring_push(c["obs"], obs_rings.EV_ADMIT,
+                                        rid, c["n_iter"])
+                o = obs_rings.ring_push(o, obs_rings.EV_FIRST, rid,
+                                        c["n_iter"])
+                o = obs_rings.ctr_add(o, obs_rings.CTR_ADC_CLIP,
+                                      taps.drain_sum(fr, "adc_clip"))
+                upd["obs"] = dict(o, tick_tok=jnp.ones((), jnp.int32))
+            else:
+                st = self._arm_slot(params, st, slot, prompt, rid, max_new,
+                                    stop)
             st = dict(st, occupant=st["occupant"].at[slot].set(qidx))
             return dict(c, st=st, q_head=qidx + 1,
                         n_admits=c["n_admits"] + 1,
-                        res_first=c["res_first"].at[qidx].set(c["n_iter"]))
+                        res_first=c["res_first"].at[qidx].set(c["n_iter"]),
+                        **upd)
 
         def admit_paged(c):
             """Grant blocks + arm the slot; the prompt streams in through
@@ -641,10 +679,19 @@ class ContinuousBatchingScheduler:
                       keys=st["keys"].at[slot].set(k0),
                       occupant=st["occupant"].at[slot].set(qidx),
                       n_alloc=st["n_alloc"].at[slot].set(max_blk))
+            upd = {}
+            if self.obs is not None:
+                o = obs_rings.ring_push(c["obs"], obs_rings.EV_ADMIT,
+                                        rid, c["n_iter"])
+                o = obs_rings.ctr_add(o, obs_rings.CTR_PREFIX_BLOCKS, n_sh)
+                o = obs_rings.ctr_add(o, obs_rings.CTR_SHARED_ADMITS,
+                                      (n_sh > 0).astype(jnp.int32))
+                upd["obs"] = dict(o, tick_tok=jnp.zeros((), jnp.int32))
             return dict(c, st=st, q_head=qidx + 1,
                         n_admits=c["n_admits"] + 1,
                         req_tables=c["req_tables"].at[qidx].set(tbl_row),
-                        peak_blocks=jnp.maximum(c["peak_blocks"], used))
+                        peak_blocks=jnp.maximum(c["peak_blocks"], used),
+                        **upd)
 
         def prefill_chunk(c):
             """Advance the first filling slot by one chunk; the final
@@ -657,8 +704,14 @@ class ContinuousBatchingScheduler:
             plen = q_meta[qidx, 3]
             start = st["cache"]["pos"][slot]
             chunk = jax.lax.dynamic_slice(q_toks, (qidx, start), (1, C))
-            logits, cache = lm.prefill_chunk_into_slot(
-                params, cfg, chunk, st["cache"], slot)
+            if self.obs is not None:
+                with taps.collect() as fr:
+                    logits, cache = lm.prefill_chunk_into_slot(
+                        params, cfg, chunk, st["cache"], slot)
+                clip = taps.drain_sum(fr, "adc_clip")
+            else:
+                logits, cache = lm.prefill_chunk_into_slot(
+                    params, cfg, chunk, st["cache"], slot)
             done = (start + C) >= plen
             row = jnp.clip(plen - 1 - start, 0, C - 1)
             lg = jax.lax.dynamic_slice(
@@ -685,15 +738,25 @@ class ContinuousBatchingScheduler:
                 live=st["live"].at[slot].set(done & ~fin0),
                 pending=st["pending"].at[slot].set(done & fin0),
                 filling=st["filling"].at[slot].set(~done))
+            upd = {}
+            if self.obs is not None:
+                # first-token stamp at EXACTLY the site that sets
+                # res_first: the final chunk samples the first token
+                o = obs_rings.ring_push(c["obs"], obs_rings.EV_FIRST,
+                                        q_meta[qidx, 0], c["n_iter"],
+                                        do=done)
+                o = obs_rings.ctr_add(o, obs_rings.CTR_ADC_CLIP, clip)
+                upd["obs"] = dict(o, tick_tok=done.astype(jnp.int32))
             return dict(c, st=st, last_pf=jnp.bool_(True),
                         n_pf=c["n_pf"] + 1,
                         pf_done=c["pf_done"].at[qidx].set(
                             c["pf_done"][qidx] | done),
                         res_first=c["res_first"].at[qidx].set(
                             jnp.where(done, c["n_iter"],
-                                      c["res_first"][qidx])))
+                                      c["res_first"][qidx])),
+                        **upd)
 
-        def step(c):
+        def step_core(c):
             upd = (dict(last_pf=jnp.bool_(False)) if paged is not None
                    else {})
             if self.draft_k:
@@ -703,7 +766,7 @@ class ContinuousBatchingScheduler:
                     idx = jnp.where(ema > 0.8, 0,
                                     jnp.where(ema > 0.4, min(1, R - 1),
                                               R - 1))
-                    st, drafted, accepted = jax.lax.switch(
+                    st, drafted, accepted = taps.switch(
                         idx,
                         [lambda s, k=k: self._spec_step(params, s, k)
                          for k in self._rungs],
@@ -723,7 +786,26 @@ class ContinuousBatchingScheduler:
             return dict(c, st=self._step_fn(params, c["st"]),
                         n_steps=c["n_steps"] + 1, **upd)
 
+        def step(c):
+            if self.obs is None:
+                return step_core(c)
+            n_gen0 = jnp.sum(c["st"]["n_gen"])
+            with taps.collect() as fr:
+                c2 = step_core(c)
+            # n_gen is monotone across a decode step / spec round, so
+            # the delta is exactly the tokens this iteration emitted
+            # (variable 1..K+1 per live slot in spec mode)
+            tok = jnp.sum(c2["st"]["n_gen"]) - n_gen0
+            o = obs_rings.ctr_add(c2["obs"], obs_rings.CTR_ADC_CLIP,
+                                  taps.drain_sum(fr, "adc_clip"))
+            return dict(c2, obs=dict(o, tick_tok=tok))
+
         st = c["st"]
+        if self.obs is not None:
+            # pre-branch occupancy: the decoders that waited (or ran)
+            # through this iteration, for the stall/occupancy samples
+            live0 = jnp.sum(st["live"].astype(jnp.int32))
+            drafted0, accepted0 = c["n_drafted"], c["n_accepted"]
         qh = jnp.minimum(c["q_head"], n_queue - 1)
         arrived = q_meta[qh, 6] <= c["n_iter"]
         can_admit = ((c["q_head"] < n_queue)
@@ -747,13 +829,34 @@ class ContinuousBatchingScheduler:
             branch = jnp.where(jnp.any(st["pending"]), 0,
                                jnp.where(can_admit, 1, 2))
             c = jax.lax.switch(branch, [harvest, admit_contiguous, step], c)
+        if self.obs is not None:
+            free = (jnp.sum((c["st"]["ref"] == 0).astype(jnp.int32))
+                    if paged is not None else jnp.zeros((), jnp.int32))
+            c = dict(c, obs=obs_rings.iter_tick(
+                c["obs"], c["n_iter"], branch, live0,
+                c["n_drafted"] - drafted0, c["n_accepted"] - accepted0,
+                free))
         c = dict(c, n_iter=c["n_iter"] + 1)
         cont = jnp.any(self._occupied(c["st"])) | (c["q_head"] < n_queue)
         return c, branch, cont
 
-    def _build_loop(self, n_queue: int):
-        """Compile the whole-workload loop for a queue of n_queue requests."""
-        def serve_loop(params, carry, q_toks, q_meta, q_pins):
+    def _lower_loop(self, n_queue: int):
+        """Lower (don't compile) the whole-workload loop for a queue of
+        n_queue requests.
+
+        Metrics OFF: this function is required to produce StableHLO text
+        byte-identical to the pre-telemetry scheduler -- the sha256 of
+        ``loop_hlo_text`` is the zero-overhead-when-off gate in
+        benchmarks/serve_bench.py, so every telemetry hook below is a
+        Python-level conditional, never a traced-then-unused value.
+
+        Metrics ON: the telemetry rings enter as their own donated
+        argument (the only carry members that appear unchanged in shape
+        among the outputs, so donation actually aliases -- the
+        OBS-RING-DONATION lint checks this) and leave as ``out["obs"]``
+        for ``harvest_obs``.
+        """
+        def serve_body(params, carry, q_toks, q_meta, q_pins):
             def body(c):
                 return self._step_once(params, c, q_toks, q_meta, q_pins,
                                        n_queue)[0]
@@ -770,16 +873,37 @@ class ContinuousBatchingScheduler:
                        n_accepted=c["n_accepted"])
             if self.paged is not None:
                 out.update(n_pf=c["n_pf"], peak_blocks=c["peak_blocks"])
+            if self.obs is not None:
+                out["obs"] = c["obs"]
             return out
 
-        # no donation: the loop's outputs are only the result buffers, so
-        # the input state can't alias anything (XLA would warn and ignore)
-        carry = self._init_carry(n_queue)
+        carry = self._init_carry(n_queue, with_obs=False)
         qt = _i32(np.zeros((n_queue, self._p_pad)))
         qm = _i32(np.zeros((n_queue, _QM_COLS)))
         qp = _i32(np.zeros((n_queue, self._n_pin_cols())))
-        return (jax.jit(serve_loop)
-                .lower(self._params, carry, qt, qm, qp).compile())
+        if self.obs is not None:
+            def serve_loop(params, carry, obs, q_toks, q_meta, q_pins):
+                return serve_body(params, dict(carry, obs=obs), q_toks,
+                                  q_meta, q_pins)
+            return jax.jit(serve_loop, donate_argnums=(2,)).lower(
+                self._params, carry, obs_rings.init_obs_state(self.obs),
+                qt, qm, qp)
+
+        def serve_loop(params, carry, q_toks, q_meta, q_pins):
+            return serve_body(params, carry, q_toks, q_meta, q_pins)
+
+        # no donation: the loop's outputs are only the result buffers, so
+        # the input state can't alias anything (XLA would warn and ignore)
+        return jax.jit(serve_loop).lower(self._params, carry, qt, qm, qp)
+
+    def loop_hlo_text(self, n_queue: int) -> str:
+        """Pre-optimization StableHLO of the serve loop (fingerprint
+        input for the zero-overhead-when-off gate, obs/fingerprint.py)."""
+        return self._lower_loop(n_queue).as_text()
+
+    def _build_loop(self, n_queue: int):
+        """Compile the whole-workload loop for a queue of n_queue requests."""
+        return self._lower_loop(n_queue).compile()
 
     def _build_iter(self, n_queue: int):
         """Compile ONE scheduler iteration (the switch) for the
@@ -825,7 +949,11 @@ class ContinuousBatchingScheduler:
             st["cache"] = lm.init_cache(self.cfg, B, self.max_seq)
         return st
 
-    def _init_carry(self, n_queue: int) -> Dict:
+    def _init_carry(self, n_queue: int, with_obs: bool = True) -> Dict:
+        """``with_obs=False`` builds the obs-less carry the whole-loop
+        executable takes (its telemetry rings enter as a separately
+        donated argument, see ``_lower_loop``); the single-iteration
+        executable keeps them in the carry it round-trips."""
         carry = dict(
             st=self._init_state(), q_head=_i32(0), n_iter=_i32(0),
             n_steps=_i32(0), n_admits=_i32(0), n_drafted=_i32(0),
@@ -842,6 +970,8 @@ class ContinuousBatchingScheduler:
                 pf_done=jnp.zeros((n_queue,), jnp.bool_),
                 req_tables=jnp.zeros((n_queue, self.paged.n_tbl),
                                      jnp.int32))
+        if self.obs is not None and with_obs:
+            carry["obs"] = obs_rings.init_obs_state(self.obs)
         return carry
 
     # -- host-side staging ---------------------------------------------
@@ -900,6 +1030,7 @@ class ContinuousBatchingScheduler:
             plan = plan_prefix_sharing(
                 [np.asarray(r.prompt) for r in requests],
                 lay.block_size, lay.n_tbl, enable=enable)
+            self.last_prefix_plan = plan
             pins = plan.pin_counts.astype(np.int64)
             max_blks = np.zeros(n, np.int64)
             for i, r in enumerate(requests):
@@ -951,10 +1082,14 @@ class ContinuousBatchingScheduler:
         self._check(requests)
         loop = self.compile_for(len(requests))
         q_toks, q_meta, q_pins = self._stage(requests, arrival_iters)
-        carry = jax.block_until_ready(self._init_carry(len(requests)))
+        carry = jax.block_until_ready(
+            self._init_carry(len(requests), with_obs=False))
+        args = (q_toks, q_meta, q_pins)
+        if self.obs is not None:
+            args = (jax.block_until_ready(
+                obs_rings.init_obs_state(self.obs)),) + args
         t0 = time.time()                    # compile + staging off the clock
-        res = jax.block_until_ready(
-            loop(self._params, carry, q_toks, q_meta, q_pins))
+        res = jax.block_until_ready(loop(self._params, carry, *args))
         wall = time.time() - t0
         res_out, res_n = np.asarray(res["res_out"]), np.asarray(res["res_n"])
         res_iter, n_iter = np.asarray(res["res_iter"]), int(res["n_iter"])
@@ -964,13 +1099,21 @@ class ContinuousBatchingScheduler:
             latency_s=wall * int(res_iter[i]) / max(n_iter, 1),
             finish_iter=int(res_iter[i]), first_iter=int(res_first[i]))
             for i, r in enumerate(requests)]
-        return ServeReport(finished=done, wall_s=wall,
-                           n_steps=int(res["n_steps"]),
-                           n_admits=int(res["n_admits"]), slots=self.slots,
-                           n_drafted=int(res["n_drafted"]),
-                           n_accepted=int(res["n_accepted"]),
-                           n_pf=int(res.get("n_pf", 0)),
-                           peak_blocks=int(res.get("peak_blocks", 0)))
+        report = ServeReport(finished=done, wall_s=wall,
+                             n_steps=int(res["n_steps"]),
+                             n_admits=int(res["n_admits"]), slots=self.slots,
+                             n_drafted=int(res["n_drafted"]),
+                             n_accepted=int(res["n_accepted"]),
+                             n_pf=int(res.get("n_pf", 0)),
+                             peak_blocks=int(res.get("peak_blocks", 0)))
+        if self.obs is not None:
+            report.obs = obs_rings.harvest_obs(
+                self.obs, jax.device_get(res["obs"]), n_iter=n_iter,
+                wall_s=wall, slots=self.slots,
+                n_steps=report.n_steps, n_drafted=report.n_drafted,
+                n_accepted=report.n_accepted,
+                paged=self.paged is not None)
+        return report
 
     def run_instrumented(self, requests: Sequence[Request],
                          arrival_iters: Optional[Sequence[int]] = None
@@ -1020,6 +1163,15 @@ class ContinuousBatchingScheduler:
             n_drafted=int(c["n_drafted"]), n_accepted=int(c["n_accepted"]),
             n_pf=int(c.get("n_pf", 0)),
             peak_blocks=int(c.get("peak_blocks", 0)))
+        if self.obs is not None:
+            # the instrumented runner's carry keeps the rings inline
+            # (the host round-trips it), so harvest reads them directly
+            report.obs = obs_rings.harvest_obs(
+                self.obs, jax.device_get(c["obs"]),
+                n_iter=len(branches), wall_s=wall, slots=self.slots,
+                n_steps=report.n_steps, n_drafted=report.n_drafted,
+                n_accepted=report.n_accepted,
+                paged=self.paged is not None)
         timeline = dict(branch=np.asarray(branches, np.int32),
                         iter_s=np.asarray(iter_s))
         return report, timeline

@@ -38,6 +38,7 @@ import numpy as np
 from ..configs import ARCHS, get_config
 from ..data import DataConfig, batch_at
 from ..models import lm
+from ..obs import REGISTRY, ObsConfig, get_tracer, set_trace_path, span
 from .paging import PagedLayout
 from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
                         sampling_key)
@@ -46,11 +47,19 @@ from .scheduler import (ContinuousBatchingScheduler, mixed_length_requests,
 def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
           gen: int = 16, cim: bool = False, temperature: float = 0.0,
           seed: int = 0, pack: bool = True, return_stats: bool = False,
-          plan=None, noise_seed=None, fuse: bool = True):
+          plan=None, noise_seed=None, fuse: bool = True,
+          metrics: bool = False):
     """Returns generated tokens (batch, gen); with ``return_stats=True``,
     returns (tokens, stats) where stats separates compile / pack /
     prefill / decode time -- prefill and decode steps are AOT-compiled up
     front, so every throughput number is pure execution.
+
+    ``metrics=True`` records pack/compile/prefill/decode spans through
+    the obs tracer (obs/trace.py), publishes the run's totals into the
+    process metrics registry (``repro.obs.REGISTRY`` -- Prometheus text
+    via ``export_prometheus()``), and attaches the registry snapshot as
+    ``stats["metrics"]``.  The lock-step driver has no device rings --
+    those are a scheduler feature (``serve_continuous(metrics=True)``).
 
     ``plan`` (a repro.plan.DeploymentPlan) serves each projection under
     its own macro config/fidelity (implies cim); plans are static, so the
@@ -99,7 +108,8 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
         # pack_cim_params is jit-compiled internally (eager == jit packs
         # are bit-identical); under a plan each projection packs for its
         # own entry's macro config
-        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
+        with span("serve.pack", arch=arch):
+            params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
         t_pack = time.time() - t0
 
     n_frontend = fe.shape[1] if fe is not None else 0
@@ -111,12 +121,14 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
     # lowering with the pre-prefill cache is sound -- cache shapes are
     # static across the whole generation.
     t0 = time.time()
-    prefill = jax.jit(lambda p, t, c, f: lm.prefill(p, cfg, t, c, f),
-                      donate_argnums=(2,)
-                      ).lower(params, tokens, cache, fe).compile()
-    tok0 = jnp.zeros((batch, 1), jnp.int32)
-    decode = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c),
-                     donate_argnums=(2,)).lower(params, tok0, cache).compile()
+    with span("serve.compile", arch=arch):
+        prefill = jax.jit(lambda p, t, c, f: lm.prefill(p, cfg, t, c, f),
+                          donate_argnums=(2,)
+                          ).lower(params, tokens, cache, fe).compile()
+        tok0 = jnp.zeros((batch, 1), jnp.int32)
+        decode = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c),
+                         donate_argnums=(2,)
+                         ).lower(params, tok0, cache).compile()
     t_compile = time.time() - t0
 
     def sample(logits):
@@ -131,20 +143,23 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
         return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
 
     t0 = time.time()
-    logits, cache = prefill(params, tokens, cache, fe)
-    # the first generated token goes through the same sampler as the rest
-    # (it used to be unconditionally greedy while later tokens sampled)
-    tok = sample(logits)
-    tok.block_until_ready()
+    with span("serve.prefill", arch=arch):
+        logits, cache = prefill(params, tokens, cache, fe)
+        # the first generated token goes through the same sampler as the
+        # rest (it used to be unconditionally greedy while later tokens
+        # sampled)
+        tok = sample(logits)
+        tok.block_until_ready()
     t_prefill = time.time() - t0
 
     out = [tok]                      # device-side; one transfer at the end
     t0 = time.time()
-    for i in range(gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = sample(logits)
-        out.append(tok)
-    gen_tokens = np.asarray(jnp.concatenate(out, axis=1))
+    with span("serve.decode", arch=arch, steps=gen - 1):
+        for i in range(gen - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = sample(logits)
+            out.append(tok)
+        gen_tokens = np.asarray(jnp.concatenate(out, axis=1))
     t_decode = time.time() - t0
 
     decode_steps = gen - 1
@@ -164,6 +179,18 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, prompt_len: int = 32,
         prefill_tok_s=round(batch * prefill_len / t_prefill, 2)
         if t_prefill > 0 else float("nan"),
     )
+    if metrics:
+        REGISTRY.counter(
+            "serve_tokens_total",
+            "tokens emitted by the serving drivers").inc(batch * gen)
+        REGISTRY.gauge("serve_decode_tok_s",
+                       "lock-step decode throughput").set(decode_tok_s)
+        REGISTRY.histogram(
+            "serve_decode_step_seconds", "mean decode-step latency",
+            buckets=(0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0)).observe_many(
+            [t_decode / decode_steps] * decode_steps if decode_steps else [])
+        stats["metrics"] = REGISTRY.snapshot()
+        stats["spans"] = get_tracer().drain()
     mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
     print(f"[serve] {arch} ({mode}): batch {batch}, prompt {prompt_len}, "
           f"gen {gen} | compile {t_compile:.2f}s, pack {t_pack:.2f}s, "
@@ -180,7 +207,7 @@ def serve_speculative(arch: str, smoke: bool = True, batch: int = 2,
                       temperature: float = 0.0, seed: int = 0, plan=None,
                       cim: bool = True, pack: bool = True, fuse: bool = True,
                       compare_baseline: bool = True,
-                      return_stats: bool = False):
+                      return_stats: bool = False, metrics: bool = False):
     """Plan-cascade speculative lock-step driver: ONE AOT dispatch per
     draft/verify ROUND instead of one per token.
 
@@ -349,6 +376,18 @@ def serve_speculative(arch: str, smoke: bool = True, batch: int = 2,
         tokens_per_round=round(batch * target / n_rounds, 2) if n_rounds
         else float("nan"),
     )
+    if metrics:
+        REGISTRY.counter("serve_tokens_total",
+                         "tokens emitted by the serving drivers").inc(
+            batch * gen)
+        REGISTRY.counter("serve_drafted_total",
+                         "speculative draft tokens proposed").inc(n_drafted)
+        REGISTRY.counter("serve_accepted_total",
+                         "speculative draft tokens accepted").inc(n_accepted)
+        REGISTRY.gauge("serve_decode_tok_s",
+                       "lock-step decode throughput").set(decode_tok_s)
+        stats["metrics"] = REGISTRY.snapshot()
+        stats["spans"] = get_tracer().drain()
     print(f"[serve-spec] {arch} (k={K}, draft {stats['draft_plan']}): "
           f"batch {batch}, gen {gen} | decode {t_decode:.2f}s "
           f"({decode_tok_s:.1f} tok/s), acceptance "
@@ -386,7 +425,8 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                      paged: PagedLayout | None = None,
                      prefill_chunk: int | None = None,
                      prefix_sharing: bool = True,
-                     adaptive_draft_k: bool = False):
+                     adaptive_draft_k: bool = False,
+                     metrics: bool | ObsConfig = False):
     """Continuous-batching driver: a mixed-length request queue served
     from a fixed pool of ``slots`` decode slots (launch/scheduler.py).
 
@@ -406,7 +446,17 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     to the non-speculative lock-step baseline, so the parity assert is
     kept; at temperature > 0 speculative sampling is only
     distribution-identical and the lock-step comparison is skipped.
+
+    ``metrics`` (True or an ObsConfig) compiles the scheduler's device-
+    resident telemetry rings into the serve loop (launch/scheduler.py):
+    the harvested snapshot lands in ``stats["telemetry"]`` and the
+    process registry (``repro.obs.REGISTRY``), and the pack/compile/
+    workload phases are span-traced.  Tokens are bit-identical with
+    metrics on or off -- the rings only read values the loop already
+    computes.
     """
+    obs = (metrics if isinstance(metrics, ObsConfig)
+           else (ObsConfig() if metrics else None))
     if draft_k and temperature > 0:
         compare_lockstep = False
     compare_contiguous = paged is not None and compare_lockstep
@@ -425,7 +475,8 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     t_pack = 0.0
     if pack:
         t0 = time.time()
-        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
+        with span("serve.pack", arch=arch):
+            params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
         t_pack = time.time() - t0
 
     if draft_k and draft_plan is None:
@@ -440,11 +491,14 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
         max_new_cap=max(stop_lengths), temperature=temperature, seed=seed,
         draft_k=draft_k, draft_plan=draft_plan, paged=paged,
         prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
-        adaptive_draft_k=adaptive_draft_k)
-    sched.compile_for(n_requests, lockstep=compare_lockstep)
+        adaptive_draft_k=adaptive_draft_k, obs=obs)
+    with span("serve.compile", arch=arch, n_queue=n_requests):
+        sched.compile_for(n_requests, lockstep=compare_lockstep)
     t_compile = time.time() - t0
 
-    runs = [sched.run(requests) for _ in range(repeats)]
+    with span("serve.workload", arch=arch, n_requests=n_requests,
+              repeats=repeats):
+        runs = [sched.run(requests) for _ in range(repeats)]
     for other in runs[1:]:
         got, want = other.tokens_by_rid(), runs[0].tokens_by_rid()
         for rid in want:
@@ -471,6 +525,9 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
                               kv_bytes_peak=sched.kv_bytes_paged(
                                   report.peak_blocks),
                               kv_bytes_contiguous=sched.kv_bytes_contiguous())
+        plan = getattr(sched, "last_prefix_plan", None)
+        if plan is not None:
+            stats["paged"]["prefix_plan"] = plan.stats()
     if compare_contiguous:
         # paged vs contiguous parity: the paged pool may only change WHERE
         # KV rows live, never a single token
@@ -501,6 +558,13 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
         stats["speedup_vs_lockstep"] = round(
             stats["tok_s_median"] / base_median, 2) if base_median > 0 \
             else float("nan")
+    if obs is not None and report.obs is not None:
+        report.obs.register(REGISTRY)
+        REGISTRY.gauge("serve_decode_tok_s",
+                       "continuous-batching throughput").set(report.tok_s)
+        stats["telemetry"] = report.obs.to_dict()
+        stats["metrics"] = REGISTRY.snapshot()
+        stats["spans"] = get_tracer().drain()
     mode = ("cim-packed" if pack else "cim-unpacked") if cim else "fp"
     if draft_k:
         mode += f"+spec-k{draft_k}"
@@ -556,7 +620,16 @@ def main():
     ap.add_argument("--no-prefix-sharing", dest="prefix_sharing",
                     action="store_false",
                     help="(--paged-blocks) disable shared-prefix reuse")
+    ap.add_argument("--metrics", action="store_true",
+                    help="device-resident telemetry rings + metrics registry")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the Prometheus text exposition here")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="append JSON-lines span traces here")
     args = ap.parse_args()
+    metrics = args.metrics or bool(args.metrics_out)
+    if args.trace_out:
+        set_trace_path(args.trace_out)
     if args.continuous:
         paged = None
         if args.paged_blocks:
@@ -574,18 +647,22 @@ def main():
                          draft_adc_bits=args.draft_adc_bits,
                          adaptive_draft_k=args.adaptive_draft_k,
                          paged=paged, prefill_chunk=args.prefill_chunk,
-                         prefix_sharing=args.prefix_sharing)
+                         prefix_sharing=args.prefix_sharing, metrics=metrics)
     elif args.speculative:
         serve_speculative(args.arch, smoke=args.smoke, batch=args.batch,
                           prompt_len=args.prompt_len, gen=args.gen,
                           draft_k=args.draft_k,
                           draft_adc_bits=args.draft_adc_bits,
                           temperature=args.temperature, cim=args.cim,
-                          pack=args.pack)
+                          pack=args.pack, metrics=metrics)
     else:
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               prompt_len=args.prompt_len, gen=args.gen, cim=args.cim,
-              temperature=args.temperature, pack=args.pack)
+              temperature=args.temperature, pack=args.pack, metrics=metrics)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(REGISTRY.export_prometheus())
+        print(f"[serve] metrics exposition -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.engine import FusedPackedCimWeights
+from ..obs import taps
 from . import layers as L
 from .config import ModelConfig
 
@@ -605,7 +606,7 @@ def prefill_chunk_into_slot(params, cfg: ModelConfig, tokens: Array,
                                        kv=(ck, cv), cache_pos=pos,
                                        n_prefix=n_prefix, block_table=tbl)
             return x, new_kv
-        x, (ck, cv) = jax.lax.scan(
+        x, (ck, cv) = taps.scan(
             body, x, (params["layers"], _is_local_arr(cfg), sub["k"],
                       sub["v"]))
         sub["k"], sub["v"] = ck, cv
@@ -639,7 +640,7 @@ def prefill(params, cfg: ModelConfig, tokens: Array, cache: Dict,
                                        kv=(ck, cv), cache_pos=pos0,
                                        n_prefix=n_prefix, block_table=tbl)
             return x, new_kv
-        x, (ck, cv) = jax.lax.scan(
+        x, (ck, cv) = taps.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
         cache["k"], cache["v"] = ck, cv
     cache["pos"] = jnp.full((B,), S, jnp.int32)
@@ -686,7 +687,7 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache: Dict,
                                        kv=(ck, cv), cache_pos=pos,
                                        block_table=tbl, write_mask=wmask)
             return x, new_kv
-        x, (ck, cv) = jax.lax.scan(
+        x, (ck, cv) = taps.scan(
             body, x, (params["layers"], _is_local_arr(cfg), cache["k"], cache["v"]))
         cache["k"], cache["v"] = ck, cv
     adv = jnp.int32(1) if live is None else live.astype(jnp.int32)
@@ -740,7 +741,7 @@ def verify_step(params, cfg: ModelConfig, tokens: Array, cache: Dict,
                                    kv=(ck, cv), cache_pos=pos,
                                    block_table=tbl, write_mask=wmask)
         return x, new_kv
-    x, (ck, cv) = jax.lax.scan(
+    x, (ck, cv) = taps.scan(
         body, x, (params["layers"], _is_local_arr(cfg), cache["k"],
                   cache["v"]))
     cache["k"], cache["v"] = ck, cv
@@ -769,7 +770,7 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
         return x + h, (new_ssm, new_conv[0], new_conv[1])
 
     if cfg.family == "ssm" or not cfg.shared_attn_period:
-        x, (ssm, cx, cbc) = jax.lax.scan(
+        x, (ssm, cx, cbc) = taps.scan(
             body, x, (params["layers"], cache["ssm"], cache["conv_x"],
                       cache["conv_bc"]))
         cache["ssm"], cache["conv_x"], cache["conv_bc"] = ssm, cx, cbc
@@ -781,7 +782,7 @@ def _ssm_stack_cached(params, cfg: ModelConfig, x, positions, cache,
     done = 0
 
     def run_group(x, lo, hi):
-        return jax.lax.scan(
+        return taps.scan(
             body, x, (_slice_layers(params["layers"], lo, hi),
                       cache["ssm"][lo:hi], cache["conv_x"][lo:hi],
                       cache["conv_bc"][lo:hi]))

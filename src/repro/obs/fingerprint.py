@@ -1,0 +1,39 @@
+"""HLO fingerprints: the zero-overhead-when-off proof, made checkable.
+
+Telemetry must be a static flag compiling to a SEPARATE executable:
+with ``obs=None`` the scheduler's serve loop is required to lower to
+StableHLO text byte-identical to the pre-telemetry program.  A sha256
+of that text is a checkable artifact: serve_bench embeds the
+fingerprints (plus the host fingerprint they are only comparable
+under) in BENCH_serve.json, and ``--check-regression`` fails if a
+metrics-off fingerprint moved on a matching host -- i.e. if ANY code
+path started paying for telemetry while it is off.
+
+The lowering text is pre-optimization, so even dead telemetry ops
+would change it -- the gate catches "computed but unused" leaks, not
+just live overhead.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict
+
+
+def hlo_fingerprint(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def scheduler_fingerprint(sched, n_queue: int) -> str:
+    """sha256 of the scheduler's lowered serve-loop StableHLO."""
+    return hlo_fingerprint(sched.loop_hlo_text(n_queue))
+
+
+def fingerprint_variants(make_sched, n_queue: int = 2) -> Dict[str, str]:
+    """Fingerprint a set of scheduler variants.  ``make_sched`` maps a
+    variant name from ``VARIANTS`` to a built scheduler."""
+    return {name: scheduler_fingerprint(make_sched(name), n_queue)
+            for name in VARIANTS}
+
+
+#: the serve-loop variants the regression gate covers
+VARIANTS = ("contiguous", "paged", "speculative")

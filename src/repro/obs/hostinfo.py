@@ -1,0 +1,60 @@
+"""Host fingerprinting for benchmark JSONs and the HLO-fingerprint gate.
+
+The serve/kernel benchmarks document a +-2x wall-clock swing across
+hosts; a BENCH_*.json row without the host it ran on is therefore not a
+trajectory point, just a number.  ``host_fingerprint()`` captures the
+identity that actually moves the numbers (platform, device kind, jax /
+jaxlib versions, git sha), and every benchmark JSON embeds it next to a
+``schema_version`` so downstream tooling can tell revisions apart.
+
+``host_matches()`` is the comparison the HLO-fingerprint regression
+gate uses: StableHLO text is stable for a fixed (jax version, backend,
+device kind) triple but not across them, so the zero-overhead-when-off
+proof only fires when the baseline was produced by a matching host.
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+from typing import Dict, Optional
+
+# benchmark row schema: bump when a BENCH_*.json field changes meaning
+BENCH_SCHEMA_VERSION = 2
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def host_fingerprint() -> Dict[str, Optional[str]]:
+    import jax
+    import jaxlib
+    dev = jax.devices()[0]
+    return dict(
+        platform=platform.platform(),
+        python=platform.python_version(),
+        backend=jax.default_backend(),
+        device_kind=dev.device_kind,
+        jax=jax.__version__,
+        jaxlib=jaxlib.__version__,
+        git_sha=git_sha(),
+    )
+
+
+# the identity under which compiled-program fingerprints are comparable
+_HLO_KEYS = ("backend", "device_kind", "jax", "jaxlib")
+
+
+def host_matches(a: Optional[Dict], b: Optional[Dict],
+                 keys=_HLO_KEYS) -> bool:
+    """True when ``a`` and ``b`` describe HLO-comparable hosts."""
+    if not isinstance(a, dict) or not isinstance(b, dict):
+        return False
+    return all(a.get(k) is not None and a.get(k) == b.get(k) for k in keys)

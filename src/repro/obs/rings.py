@@ -1,0 +1,301 @@
+"""On-device telemetry rings: the hot-path half of the obs subsystem.
+
+The scheduler's while-loop carry gains one ``obs`` subtree (metrics on
+only -- ``obs=None`` compiles byte-identical HLO) holding fixed-size
+int32 arrays:
+
+  ev       (event_cap, 3)   event ring rows ``(kind, rid, iter)``:
+                            request admission, first token, finish --
+                            written at exactly the sites that set the
+                            carry's ``res_first``/``res_iter`` stamps,
+                            so ring-derived TTFT iterations EQUAL
+                            ``run_instrumented``'s ``first_iter``.
+  ev_n     ()               monotone event cursor.  Writes use scatter
+                            ``mode="drop"``: once the ring is full the
+                            row write lands out of bounds and is
+                            dropped, the cursor keeps counting, and
+                            ``max(ev_n - cap, 0)`` is the drop count --
+                            overflow degrades to a saturating counter,
+                            it never wraps over recorded history.
+  it       (iter_cap, 6)    per-iteration sample ring, row = (branch,
+                            live slots, tokens emitted, draft delta,
+                            accept delta, free pool blocks); indexed by
+                            the iteration number with the same
+                            ``mode="drop"`` saturation.
+  ctr      (N_CTR,)         scalar counters (below) -- these never
+                            saturate, so totals stay exact even when
+                            the sample rings overflow.
+  tick_tok ()               scratch: the switch branch that ran this
+                            iteration records how many tokens it
+                            emitted; the shared per-iteration tick in
+                            the loop tail consumes it.
+
+Counter slots: TOKENS (emitted, all branches), STALL (iterations where
+live decoders existed but zero tokens were emitted -- harvest/admit/
+mid-prefill iterations inflating the decode timeline), ADC_CLIP (codes
+the packed GEMM's ADC epilogue clipped, via obs/taps.py), PREFIX_BLOCKS
+(shared-prefix blocks reused instead of recomputed), SHARED_ADMITS
+(admissions that copied a donor chain), MIN_FREE (low-water mark of the
+paged free list, ``.at[].min`` -- a gauge, initialised to int32 max).
+
+Everything is int32: the serve-path lint (analysis/tracer.py) forbids
+64-bit avals in the loop, and iteration counts/ring capacities are far
+below 2^31.
+
+Calibration: the device has no clock, so rings record ITERATION stamps.
+``harvest_obs`` converts to seconds with the uniform-iteration estimate
+``wall_s / n_iter`` -- exact at the workload level, approximate per
+iteration (admits cost more than steps).  ``run_instrumented`` remains
+the ground truth for per-iteration seconds; the rings' iteration
+numbers are exact and are cross-checked against it in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# event kinds
+EV_ADMIT, EV_FIRST, EV_FINISH = 0, 1, 2
+EV_NAMES = {EV_ADMIT: "admit", EV_FIRST: "first_token", EV_FINISH: "finish"}
+
+# counter slots
+CTR_TOKENS, CTR_STALL, CTR_ADC_CLIP = 0, 1, 2
+CTR_PREFIX_BLOCKS, CTR_SHARED_ADMITS, CTR_MIN_FREE = 3, 4, 5
+N_CTR = 6
+
+# per-iteration sample columns
+IT_BRANCH, IT_LIVE, IT_TOK, IT_DRAFTED, IT_ACCEPTED, IT_FREE = range(6)
+_IT_COLS = 6
+
+_I32_MAX = np.int32(2**31 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Static ring capacities; part of the executable's shape, so two
+    ObsConfigs compile two executables (like slots or prompt_len)."""
+    event_cap: int = 256
+    iter_cap: int = 1024
+
+    def __post_init__(self):
+        if self.event_cap < 1 or self.iter_cap < 1:
+            raise ValueError("ring capacities must be >= 1")
+
+
+def init_obs_state(cfg: ObsConfig) -> Dict:
+    import jax.numpy as jnp
+    return dict(
+        ev=jnp.zeros((cfg.event_cap, 3), jnp.int32),
+        ev_n=jnp.zeros((), jnp.int32),
+        it=jnp.zeros((cfg.iter_cap, _IT_COLS), jnp.int32),
+        ctr=jnp.zeros((N_CTR,), jnp.int32).at[CTR_MIN_FREE].set(_I32_MAX),
+        tick_tok=jnp.zeros((), jnp.int32),
+    )
+
+
+#: carry-subtree leaves a metrics-on executable must donate (see the
+#: OBS-RING-DONATION rule in analysis/obs_rules.py)
+OBS_LEAVES = ("ctr", "ev", "ev_n", "it", "tick_tok")
+
+
+def ring_push(obs: Dict, kind: int, rid, it, do=True) -> Dict:
+    """Append ``(kind, rid, it)`` to the event ring when ``do`` holds.
+
+    The conditional and the saturation share one mechanism: the write
+    index is the cursor when ``do`` else one past the end, and scatter
+    ``mode="drop"`` discards any out-of-bounds row -- so a full ring
+    (cursor >= cap) silently stops recording while the cursor keeps
+    counting attempts.
+    """
+    import jax.numpy as jnp
+    do = jnp.asarray(do, jnp.bool_)
+    cap = obs["ev"].shape[0]
+    idx = jnp.where(do, obs["ev_n"], jnp.int32(cap))
+    row = jnp.stack([jnp.asarray(kind, jnp.int32),
+                     jnp.asarray(rid, jnp.int32),
+                     jnp.asarray(it, jnp.int32)])
+    return dict(obs,
+                ev=obs["ev"].at[idx].set(row, mode="drop"),
+                ev_n=obs["ev_n"] + do.astype(jnp.int32))
+
+
+def ctr_add(obs: Dict, slot: int, amount) -> Dict:
+    import jax.numpy as jnp
+    return dict(obs, ctr=obs["ctr"].at[slot].add(
+        jnp.asarray(amount, jnp.int32)))
+
+
+def iter_tick(obs: Dict, n_iter, branch, live_cnt, drafted_d, accepted_d,
+              free_blocks) -> Dict:
+    """The shared per-iteration sample: one ring row at index ``n_iter``
+    (saturating) plus the token/stall counters.  ``obs['tick_tok']`` was
+    set by whichever switch branch ran."""
+    import jax.numpy as jnp
+    tok = obs["tick_tok"]
+    row = jnp.stack([jnp.asarray(v, jnp.int32) for v in
+                     (branch, live_cnt, tok, drafted_d, accepted_d,
+                      free_blocks)])
+    stall = ((live_cnt > 0) & (tok == 0)).astype(jnp.int32)
+    ctr = (obs["ctr"].at[CTR_TOKENS].add(tok)
+           .at[CTR_STALL].add(stall)
+           .at[CTR_MIN_FREE].min(jnp.asarray(free_blocks, jnp.int32)))
+    return dict(obs, it=obs["it"].at[n_iter].set(row, mode="drop"), ctr=ctr)
+
+
+# -- host-side harvest ------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ObsSnapshot:
+    """Typed view of one workload's harvested rings."""
+    n_iter: int
+    wall_s: float
+    slots: int
+    iter_s_est: float                 # wall-clock calibration: wall/n_iter
+    counters: Dict[str, int]
+    events: List[Dict]                # [{kind, rid, iter}], recorded rows
+    dropped_events: int
+    recorded_iters: int               # iter-ring rows actually captured
+    spans: List[Dict]                 # per-request admit/first/finish spans
+    ttft_iters: Dict[int, int]        # rid -> first-token iteration
+    occupancy_mean: float
+    stall_factor_iters: float
+    acceptance_rate: float
+    min_free_blocks: Optional[int]
+    iter_samples: Dict[str, np.ndarray]
+
+    def ttft_percentiles_iters(self) -> Dict[str, float]:
+        ts = sorted(self.ttft_iters.values())
+        if not ts:
+            return {"ttft_p50_iters": float("nan"),
+                    "ttft_p95_iters": float("nan")}
+        pick = lambda q: ts[min(len(ts) - 1, int(q * (len(ts) - 1) + 0.5))]
+        return {"ttft_p50_iters": float(pick(0.50)),
+                "ttft_p95_iters": float(pick(0.95))}
+
+    def ttft_percentiles_s(self) -> Dict[str, float]:
+        it = self.ttft_percentiles_iters()
+        return {"ttft_p50_s": it["ttft_p50_iters"] * self.iter_s_est,
+                "ttft_p95_s": it["ttft_p95_iters"] * self.iter_s_est}
+
+    def to_dict(self) -> Dict:
+        d = dict(n_iter=self.n_iter, wall_s=round(self.wall_s, 4),
+                 iter_s_est=self.iter_s_est, slots=self.slots,
+                 counters=self.counters,
+                 dropped_events=self.dropped_events,
+                 recorded_iters=self.recorded_iters,
+                 occupancy_mean=round(self.occupancy_mean, 4),
+                 stall_factor_iters=round(self.stall_factor_iters, 4),
+                 acceptance_rate=(round(self.acceptance_rate, 4)
+                                  if self.acceptance_rate ==
+                                  self.acceptance_rate else None),
+                 min_free_blocks=self.min_free_blocks,
+                 spans=self.spans,
+                 **{k: round(v, 2) if v == v else None
+                    for k, v in self.ttft_percentiles_iters().items()},
+                 **{k: round(v, 6) if v == v else None
+                    for k, v in self.ttft_percentiles_s().items()})
+        return d
+
+    def register(self, registry, prefix: str = "serve") -> None:
+        """Publish this snapshot into a metrics registry."""
+        c = self.counters
+        registry.counter(f"{prefix}_tokens_total",
+                         "tokens emitted by the device loop").inc(
+            c["tokens"])
+        registry.counter(f"{prefix}_stall_iters_total",
+                         "iterations with live decoders but no tokens"
+                         ).inc(c["stall_iters"])
+        registry.counter(f"{prefix}_adc_clip_total",
+                         "ADC codes clipped in the packed GEMM path").inc(
+            c["adc_clip"])
+        registry.counter(f"{prefix}_prefix_blocks_total",
+                         "shared-prefix KV blocks reused").inc(
+            c["prefix_blocks"])
+        registry.counter(f"{prefix}_events_dropped_total",
+                         "event-ring rows dropped after saturation").inc(
+            self.dropped_events)
+        registry.gauge(f"{prefix}_occupancy",
+                       "mean live-slot fraction over sampled iterations"
+                       ).set(self.occupancy_mean)
+        registry.gauge(f"{prefix}_stall_factor_iters",
+                       "decode-timeline inflation by non-emitting "
+                       "iterations").set(self.stall_factor_iters)
+        if self.min_free_blocks is not None:
+            registry.gauge(f"{prefix}_free_blocks_min",
+                           "paged free-list low-water mark").set(
+                self.min_free_blocks)
+        if self.acceptance_rate == self.acceptance_rate:
+            registry.gauge(f"{prefix}_acceptance_rate",
+                           "draft tokens accepted / drafted").set(
+                self.acceptance_rate)
+        h = registry.histogram(
+            f"{prefix}_ttft_seconds", "time to first token (calibrated "
+            "from iteration stamps)",
+            buckets=(0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0))
+        h.observe_many([t * self.iter_s_est
+                        for t in self.ttft_iters.values()])
+
+
+def harvest_obs(cfg: ObsConfig, raw: Dict, *, n_iter: int, wall_s: float,
+                slots: int, n_steps: int, n_drafted: int = 0,
+                n_accepted: int = 0, paged: bool = False) -> ObsSnapshot:
+    """Convert the harvested ``obs`` carry subtree into a typed snapshot.
+
+    ``raw`` is the device dict (or its numpy mirror); one host transfer,
+    after the loop already synced.
+    """
+    ev = np.asarray(raw["ev"])
+    ev_n = int(raw["ev_n"])
+    it = np.asarray(raw["it"])
+    ctr = np.asarray(raw["ctr"])
+    n_rec = min(ev_n, cfg.event_cap)
+    events = [dict(kind=EV_NAMES.get(int(k), str(int(k))), rid=int(r),
+                   iter=int(i)) for k, r, i in ev[:n_rec]]
+    rec_it = min(int(n_iter), cfg.iter_cap)
+    samples = {name: it[:rec_it, col].copy() for name, col in
+               (("branch", IT_BRANCH), ("live", IT_LIVE), ("tok", IT_TOK),
+                ("drafted", IT_DRAFTED), ("accepted", IT_ACCEPTED),
+                ("free", IT_FREE))}
+
+    by_rid: Dict[int, Dict] = {}
+    for e in events:
+        by_rid.setdefault(e["rid"], {})[e["kind"]] = e["iter"]
+    iter_s = wall_s / max(int(n_iter), 1)
+    spans = []
+    for rid in sorted(by_rid):
+        s = by_rid[rid]
+        rec = dict(rid=rid, admit_iter=s.get("admit"),
+                   first_iter=s.get("first_token"),
+                   finish_iter=s.get("finish"))
+        if rec["first_iter"] is not None:
+            rec["ttft_s_est"] = round(rec["first_iter"] * iter_s, 6)
+        if rec["admit_iter"] is not None and rec["finish_iter"] is not None:
+            rec["span_iters"] = rec["finish_iter"] - rec["admit_iter"]
+        spans.append(rec)
+    ttft = {r["rid"]: r["first_iter"] for r in spans
+            if r["first_iter"] is not None}
+
+    live = samples["live"]
+    occ = float(np.mean(live) / max(slots, 1)) if rec_it else float("nan")
+    stalls = int(ctr[CTR_STALL])
+    stall_factor = ((n_steps + stalls) / n_steps if n_steps
+                    else float("nan"))
+    acc = n_accepted / n_drafted if n_drafted else float("nan")
+    min_free = int(ctr[CTR_MIN_FREE])
+    counters = dict(tokens=int(ctr[CTR_TOKENS]), stall_iters=stalls,
+                    adc_clip=int(ctr[CTR_ADC_CLIP]),
+                    prefix_blocks=int(ctr[CTR_PREFIX_BLOCKS]),
+                    shared_admits=int(ctr[CTR_SHARED_ADMITS]))
+    return ObsSnapshot(
+        n_iter=int(n_iter), wall_s=float(wall_s), slots=slots,
+        iter_s_est=iter_s, counters=counters, events=events,
+        dropped_events=max(ev_n - cfg.event_cap, 0),
+        recorded_iters=rec_it, spans=spans, ttft_iters=ttft,
+        occupancy_mean=occ, stall_factor_iters=stall_factor,
+        acceptance_rate=acc,
+        min_free_blocks=(None if (not paged or min_free == int(_I32_MAX))
+                         else min_free),
+        iter_samples=samples)

@@ -21,6 +21,7 @@ import pytest
 
 from repro.analysis import kernels as AK
 from repro.analysis import lint as AL
+from repro.analysis import obs_rules as OB
 from repro.analysis import tracer as AT
 from repro.analysis.report import AnalysisReport, Violation, load_baseline
 from repro.kernels.ccim_matmul import autotune
@@ -365,6 +366,70 @@ def test_ast_noise_seed_clean_on_fold_in():
         "        jax.random.PRNGKey(cfg.cim_noise_seed), tag)\n",
         relpath="models/layers.py")
     assert rep.passed
+
+
+# ---------------------------------------------------------------------------
+# obs (telemetry) rules: seeded violation + innocent twin
+# ---------------------------------------------------------------------------
+
+
+def test_obs_ring_donation_fires_on_dropped_alias():
+    # two leaves "donated" but the lowering only honored one alias
+    rep = AnalysisReport()
+    OB.check_ring_donation(
+        "seeded", 'arg {tf.aliasing_output = 0 : i32} ...', 2, rep)
+    viols = [v for v in rep.violations if v.rule == "OBS-RING-DONATION"]
+    assert viols and "copied every" in viols[0].detail
+
+
+def test_obs_ring_donation_clean_when_all_leaves_alias():
+    rep = AnalysisReport()
+    text = " ".join('{tf.aliasing_output = %d : i32}' % i for i in range(5))
+    OB.check_ring_donation("clean", text, 5, rep)
+    assert rep.passed
+    assert rep.census["obs_donation"]["clean"]["aliased_buffers"] == 5
+
+
+def test_obs_host_sync_fires_on_callback_metric():
+    # a "telemetry" implementation that ships a counter through a host
+    # callback inside the loop body -- exactly what the rings forbid
+    def guilty(x):
+        def body(v):
+            jax.debug.callback(lambda a: None, v)   # the callback metric
+            return v + 1
+        return jax.lax.while_loop(lambda v: v < 8, body, x)
+
+    rep = AnalysisReport()
+    OB.check_obs_host_sync("seeded", jax.make_jaxpr(guilty)(jnp.int32(0)),
+                           rep)
+    viols = [v for v in rep.violations if v.rule == "OBS-HOST-SYNC"]
+    assert viols and "while" in viols[0].detail
+
+
+def test_obs_host_sync_clean_on_ring_push():
+    # the innocent twin: the same counter kept on-device via a ring push
+    from repro.obs.rings import ObsConfig, init_obs_state, ring_push
+
+    def clean(x):
+        obs = init_obs_state(ObsConfig(event_cap=4, iter_cap=4))
+
+        def body(carry):
+            v, ob = carry
+            ob = ring_push(ob, 0, v, v, do=v % 2 == 0)
+            return v + 1, ob
+        return jax.lax.while_loop(lambda c: c[0] < 8, body, (x, obs))
+
+    rep = AnalysisReport()
+    OB.check_obs_host_sync("clean", jax.make_jaxpr(clean)(jnp.int32(0)), rep)
+    assert rep.passed
+
+
+def test_obs_audit_clean_on_real_scheduler():
+    rep = AnalysisReport()
+    OB.audit_obs(rep)
+    assert rep.passed, rep.summary()
+    don = rep.census["obs_donation"]["scheduler_loop[obs]"]
+    assert don["aliased_buffers"] >= don["ring_leaves"] == 5
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,215 @@
+"""Device-resident serving telemetry (repro.obs + scheduler rings).
+
+The telemetry contract has three load-bearing clauses, each pinned here:
+
+1. OBSERVER EFFECT = ZERO TOKENS: a metrics-on scheduler emits tokens
+   bit-identical to the metrics-off one, across greedy and sampled
+   decoding and all three loop variants (contiguous / paged /
+   speculative).  Rings only read values the loop already computes.
+2. RINGS TELL THE TRUTH: the TTFT read back from the device event ring
+   equals the instrumented runner's host-observed ``first_iter`` exactly
+   (iteration units, no estimation), and ring overflow saturates --
+   counters stay exact, rows drop, tokens never corrupt.
+3. THE OFF SWITCH IS REAL: metrics-off lowering is deterministic and
+   contains no donation scaffolding; metrics-on compiles a separate
+   executable (cross-commit byte-identity of the off program is gated in
+   benchmarks/serve_bench.py --check-regression).
+
+Plus the host half: the Prometheus exposition must parse.
+"""
+import dataclasses
+import json
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.paging import PagedLayout
+from repro.launch.scheduler import (ContinuousBatchingScheduler,
+                                    mixed_length_requests)
+from repro.models import lm
+from repro.obs import MetricsRegistry, ObsConfig, scheduler_fingerprint
+from repro.obs import rings as R
+
+P, CAP = 8, 4
+STOPS = (2, 4, 3, 4)
+
+
+@pytest.fixture(scope="module")
+def packed_cim():
+    """Packed CIM params: the serving-shaped tree, so the metrics-on path
+    exercises the ADC-clip taps through the packed GEMM."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    cfg = dataclasses.replace(cfg, cim_mode=True)
+    params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+    packed = jax.jit(lambda p: lm.pack_cim_params(p, cfg))(params)
+    return packed, cfg
+
+
+def _variant_kwargs(variant):
+    if variant == "paged":
+        return dict(paged=PagedLayout(block_size=8, n_tbl=2, n_blocks=12))
+    if variant == "speculative":
+        return dict(draft_k=2)
+    return {}
+
+
+def _requests(cfg):
+    return mixed_length_requests(4, P, cfg.vocab_size, stop_lengths=STOPS)
+
+
+# ---------------------------------------------------------------------------
+# 1. metrics on/off token bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("variant", ["contiguous", "paged", "speculative"])
+def test_tokens_bit_identical_on_off(packed_cim, variant, temperature):
+    params, cfg = packed_cim
+    kw = dict(slots=2, prompt_len=P, max_new_cap=CAP,
+              temperature=temperature, **_variant_kwargs(variant))
+    reqs = _requests(cfg)
+    off = ContinuousBatchingScheduler(params, cfg, **kw).run(reqs)
+    on = ContinuousBatchingScheduler(params, cfg, obs=ObsConfig(),
+                                     **kw).run(reqs)
+    assert off.obs is None and on.obs is not None
+    want = off.tokens_by_rid()
+    got = on.tokens_by_rid()
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"request {rid}: telemetry rings changed tokens "
+                    f"({variant}, T={temperature})")
+    snap = on.obs
+    assert snap.counters["tokens"] == sum(len(t) for t in want.values())
+    # every request has a complete admit/first/finish span on the ring
+    assert sorted(s["rid"] for s in snap.spans) == sorted(want)
+    for s in snap.spans:
+        assert s["admit_iter"] is not None
+        assert s["first_iter"] is not None and s["finish_iter"] is not None
+        assert s["admit_iter"] <= s["first_iter"] <= s["finish_iter"]
+    if variant == "speculative":
+        # draft plan == serve plan here, so greedy acceptance is total
+        assert snap.acceptance_rate == snap.acceptance_rate  # not NaN
+    if variant == "paged":
+        assert snap.min_free_blocks is not None
+
+
+# ---------------------------------------------------------------------------
+# 2. ring truth: TTFT and overflow
+# ---------------------------------------------------------------------------
+
+
+def test_ring_ttft_equals_instrumented_first_iter(packed_cim):
+    params, cfg = packed_cim
+    sched = ContinuousBatchingScheduler(params, cfg, slots=2, prompt_len=P,
+                                        max_new_cap=CAP, obs=ObsConfig())
+    reqs = _requests(cfg)
+    rep = sched.run(reqs)
+    assert rep.obs.ttft_iters == {f.rid: f.first_iter
+                                  for f in rep.finished}
+    ri, _ = sched.run_instrumented(reqs)
+    assert rep.obs.ttft_iters == {f.rid: f.first_iter
+                                  for f in ri.finished}
+
+
+def test_ring_overflow_saturates_without_corrupting_tokens(packed_cim):
+    params, cfg = packed_cim
+    kw = dict(slots=2, prompt_len=P, max_new_cap=CAP)
+    reqs = _requests(cfg)
+    want = ContinuousBatchingScheduler(params, cfg, **kw).run(
+        reqs).tokens_by_rid()
+    # 4 requests x 3 events each = 12 event rows into a 4-row ring, and
+    # an iteration ring far smaller than the workload's n_iter
+    tiny = ContinuousBatchingScheduler(
+        params, cfg, obs=ObsConfig(event_cap=4, iter_cap=2), **kw)
+    rep = tiny.run(reqs)
+    snap = rep.obs
+    got = rep.tokens_by_rid()
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert snap.dropped_events == 3 * len(reqs) - 4
+    assert len(snap.events) == 4          # the recorded prefix survives
+    assert snap.recorded_iters == 2
+    # counters are saturating scalars, not ring rows: still exact
+    assert snap.counters["tokens"] == sum(len(t) for t in want.values())
+    assert json.dumps(snap.to_dict())     # harvest stays JSON-able
+
+
+def test_ring_push_saturation_unit():
+    obs = R.init_obs_state(ObsConfig(event_cap=3, iter_cap=2))
+    for i in range(5):
+        obs = R.ring_push(obs, R.EV_ADMIT, i, 10 + i)
+    assert int(obs["ev_n"]) == 5          # attempts keep counting
+    np.testing.assert_array_equal(np.asarray(obs["ev"])[:, 1], [0, 1, 2])
+    # a gated push neither writes nor advances the cursor
+    obs2 = R.ring_push(obs, R.EV_FINISH, 9, 99, do=False)
+    assert int(obs2["ev_n"]) == 5
+    np.testing.assert_array_equal(np.asarray(obs2["ev"]),
+                                  np.asarray(obs["ev"]))
+
+
+# ---------------------------------------------------------------------------
+# 3. the off switch
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_off_lowering_deterministic_and_donation_free(packed_cim):
+    params, cfg = packed_cim
+    mk = lambda **kw: ContinuousBatchingScheduler(
+        params, cfg, slots=2, prompt_len=P, max_new_cap=CAP, **kw)
+    fp_off = scheduler_fingerprint(mk(), 2)
+    assert scheduler_fingerprint(mk(), 2) == fp_off   # deterministic
+    fp_on = scheduler_fingerprint(mk(obs=ObsConfig()), 2)
+    assert fp_on != fp_off                # separate executables
+    text_off = mk().loop_hlo_text(2)
+    text_on = mk(obs=ObsConfig()).loop_hlo_text(2)
+    # off: no donation scaffolding at all; on: every ring leaf aliases
+    assert "tf.aliasing_output" not in text_off
+    assert text_on.count("tf.aliasing_output") >= len(R.OBS_LEAVES)
+    # capacities are part of the static shape: a different ring size is
+    # a different executable, never a runtime reallocation
+    assert fp_on != scheduler_fingerprint(
+        mk(obs=ObsConfig(event_cap=8, iter_cap=8)), 2)
+
+
+# ---------------------------------------------------------------------------
+# host half: exposition format
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$")
+
+
+def test_prometheus_exposition_parses(packed_cim):
+    params, cfg = packed_cim
+    sched = ContinuousBatchingScheduler(params, cfg, slots=2, prompt_len=P,
+                                        max_new_cap=CAP, obs=ObsConfig())
+    snap = sched.run(_requests(cfg)).obs
+    reg = MetricsRegistry()
+    snap.register(reg)
+    text = reg.export_prometheus()
+    assert text.endswith("\n")
+    typed = set()
+    for line in text.splitlines():
+        if line.startswith("# TYPE"):
+            _, _, name, kind = line.split()
+            assert kind in ("counter", "gauge", "histogram")
+            typed.add(name)
+        elif not line.startswith("#"):
+            assert _SAMPLE_RE.match(line), f"unparseable sample: {line!r}"
+    assert {"serve_tokens_total", "serve_ttft_seconds",
+            "serve_occupancy"} <= typed
+    # histogram invariants: cumulative buckets, +Inf == _count
+    h = reg.histogram("serve_ttft_seconds")
+    cum = np.cumsum(h.counts)
+    assert (np.diff(cum) >= 0).all()
+    assert cum[-1] == h.count == len(snap.ttft_iters)
+
+    # the JSON snapshot mirrors the same samples
+    js = reg.snapshot()
+    assert js["serve_tokens_total"][0]["value"] == snap.counters["tokens"]
+    assert js["serve_ttft_seconds"][0]["count"] == len(snap.ttft_iters)
