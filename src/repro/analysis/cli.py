@@ -20,7 +20,7 @@ from typing import Optional, Sequence
 
 from .report import AnalysisReport, load_baseline
 
-SECTIONS = ("lint", "kernels", "trace", "obs")
+SECTIONS = ("lint", "kernels", "trace", "obs", "resilience")
 _PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -41,6 +41,9 @@ def run_analysis(sections: Sequence[str] = SECTIONS,
     if "obs" in sections:
         from .obs_rules import audit_obs
         audit_obs(report, arch=arch)
+    if "resilience" in sections:
+        from .resilience_rules import audit_resilience
+        audit_resilience(report, arch=arch)
     return report
 
 

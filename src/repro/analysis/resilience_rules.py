@@ -1,0 +1,125 @@
+"""Resilience rules: the chaos machinery must be invisible when disarmed.
+
+The fault-injection layer (resilience/faults.py) is a trace-time static
+flag, like the obs taps: while no ``inject()`` frame is open, not one
+extra op may be traced, and the watchdog reads health exclusively at
+segment boundaries of the guarded loop.  Both properties are checkable
+from the lowered program, so they are lint rules:
+
+- RES-OFF-PATH   the fault-free serve loop lowers byte-identical
+  StableHLO before vs after a FaultModel arm/disarm cycle (the plain
+  whole-workload loop AND the segmented guarded loop).  The rule also
+  requires the fault-ARMED segment lowering to DIFFER from the clean
+  one: an off-path gate that passes because the feature traced nothing
+  either way would certify a dead feature.
+- RES-HOST-SYNC  the fault-armed segmented loop body -- the exact
+  lowering ``GuardedServer.compile_for`` executes under chaos -- must
+  contain no host callback / infeed / transfer primitive.  Drift
+  severity follows the device iteration clock (``faults.clock`` binds
+  ``carry['n_iter']``), so a schedule that needed a host round-trip per
+  iteration would break the one-sync-per-segment serving contract.
+"""
+from __future__ import annotations
+
+from .report import AnalysisReport
+from .tracer import HOST_SYNC_PRIMITIVES, walk_jaxpr
+
+# the audited chaos scenario: drift on every analog surface, so any
+# epilogue that forgot its gate would change the armed lowering
+_AUDIT_FAULT = dict(gain_amp=0.5, offset_lsb=1.0, adc_offset_lsb=0.5,
+                    adc_clip_bits=1.0, schedule="ramp", onset=4, period=16)
+
+
+def audit_resilience(report: AnalysisReport,
+                     arch: str = "minicpm-2b") -> None:
+    """Run both resilience rules against the real scheduler lowerings."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..launch import scheduler as sched_mod
+    from ..obs import ObsConfig
+    from ..obs.fingerprint import hlo_fingerprint
+    from ..resilience import faults as rfaults
+    from .tracer import reduced_cim_setup
+
+    cfg, packed = reduced_cim_setup(arch)
+    fault = rfaults.FaultModel(**_AUDIT_FAULT)
+    n_queue = 2
+
+    def make():
+        return sched_mod.ContinuousBatchingScheduler(
+            packed, cfg, slots=2, prompt_len=8, max_new_cap=4,
+            obs=ObsConfig())
+
+    # -- RES-OFF-PATH ------------------------------------------------------
+    report.check("RES-OFF-PATH")
+    loop_before = hlo_fingerprint(make().loop_hlo_text(n_queue))
+    seg_before = hlo_fingerprint(make().segment_hlo_text(n_queue))
+    with rfaults.inject(fault):
+        seg_armed = hlo_fingerprint(make().segment_hlo_text(n_queue))
+    loop_after = hlo_fingerprint(make().loop_hlo_text(n_queue))
+    seg_after = hlo_fingerprint(make().segment_hlo_text(n_queue))
+
+    report.census["resilience_off_path"] = {
+        "loop_fingerprint": loop_before,
+        "segment_fingerprint": seg_before,
+        "segment_fingerprint_armed": seg_armed,
+        "identical_after_arm_cycle": (loop_before == loop_after
+                                      and seg_before == seg_after),
+        "armed_segment_differs": seg_armed != seg_before,
+    }
+    if loop_before != loop_after:
+        report.add(
+            "RES-OFF-PATH", "scheduler_loop",
+            "arming + disarming a FaultModel changed the fault-free "
+            "whole-workload loop lowering -- fault-off serving is paying "
+            "for the chaos machinery")
+    if seg_before != seg_after:
+        report.add(
+            "RES-OFF-PATH", "segment_loop",
+            "arming + disarming a FaultModel changed the fault-free "
+            "segmented (guarded) loop lowering")
+    if seg_armed == seg_before:
+        report.add(
+            "RES-OFF-PATH", "segment_loop[armed]",
+            "the fault-ARMED segment lowered byte-identically to the "
+            "clean one -- injection is not wired into the compiled loop, "
+            "so the off-path gate certifies a dead feature")
+
+    # -- RES-HOST-SYNC -----------------------------------------------------
+    report.check("RES-HOST-SYNC")
+    sched = make()
+    carry = sched._init_carry(n_queue, with_obs=True)
+    qt = jnp.zeros((n_queue, sched._p_pad), jnp.int32)
+    qm = jnp.zeros((n_queue, sched_mod._QM_COLS), jnp.int32)
+    qp = jnp.zeros((n_queue, sched._n_pin_cols()), jnp.int32)
+
+    def seg_loop(params, c, budget, q_toks, q_meta, q_pins):
+        def body(ci):
+            with rfaults.clock(ci["n_iter"]):
+                return sched._step_once(params, ci, q_toks, q_meta,
+                                        q_pins, n_queue)[0]
+
+        def cond(ci):
+            work = (jnp.any(sched._occupied(ci["st"]))
+                    | (ci["q_head"] < n_queue))
+            return work & (ci["n_iter"] < budget)
+
+        return jax.lax.while_loop(cond, body, c)
+
+    with rfaults.inject(fault):
+        jaxpr = jax.make_jaxpr(seg_loop)(packed, carry, jnp.int32(0),
+                                         qt, qm, qp)
+
+    def visit(eqn, path):
+        if eqn.primitive.name in HOST_SYNC_PRIMITIVES:
+            ctx = " > ".join(path) if path else "top level"
+            report.add(
+                "RES-HOST-SYNC", f"guarded_segment:{eqn.primitive.name}",
+                f"host-sync primitive `{eqn.primitive.name}` at {ctx} in "
+                "the fault-armed guarded loop -- drift severity and health "
+                "signals must stay device-resident between segment "
+                "boundaries")
+
+    walk_jaxpr(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, visit)
+    report.census["resilience_audit_fault"] = dict(_AUDIT_FAULT)

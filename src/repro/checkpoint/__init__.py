@@ -1,1 +1,2 @@
-from .manager import latest_step, load_meta, restore, save  # noqa: F401
+from .manager import (CheckpointError, latest_step, load_meta,  # noqa: F401
+                      restore, save, verify)

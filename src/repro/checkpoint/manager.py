@@ -18,10 +18,18 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be restored (truncated archive,
+    missing/mismatched leaves, unreadable metadata).  Distinct from
+    FileNotFoundError -- callers that fall back to cold start on *absent*
+    checkpoints should NOT silently swallow a *corrupt* one."""
 
 
 def _path_part(p) -> str:
@@ -84,27 +92,124 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(steps[-1].split("_")[1]) if steps else None
 
 
+def _open_npz(path: str):
+    """Open a checkpoint archive, normalising every way a short write or
+    disk corruption surfaces (bad zip directory, truncated member) into
+    one clear CheckpointError."""
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no checkpoint archive at {path}")
+    try:
+        return np.load(path)
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise CheckpointError(
+            f"checkpoint archive {path} is truncated or corrupt "
+            f"({type(e).__name__}: {e}); the save was interrupted after "
+            "the atomic rename or the file was damaged on disk -- fall "
+            "back to an earlier step") from e
+
+
+def _read_leaf(data, path: str, key: str) -> np.ndarray:
+    """Read one leaf array, converting a truncated member (zlib/zip error
+    mid-decompress) into a CheckpointError naming the leaf."""
+    try:
+        return data[key]
+    except KeyError:
+        raise CheckpointError(
+            f"checkpoint {path} is missing leaf {key!r}: the target pytree "
+            "structure does not match what was saved (stale code, wrong "
+            "arch, or a partially-written archive). "
+            f"Archive holds {len(data.files)} leaves.") from None
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise CheckpointError(
+            f"checkpoint {path}: leaf {key!r} is unreadable "
+            f"({type(e).__name__}: {e}) -- the archive is truncated or "
+            "corrupt") from e
+
+
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``target``; device_put to ``shardings``
     (same-structure tree of NamedSharding) when given -- this is the elastic
-    re-shard path."""
+    re-shard path.
+
+    Raises ``CheckpointError`` (never a bare KeyError/AssertionError from
+    deep inside unflatten) when the archive is truncated/corrupt, a target
+    leaf is absent from it, or a leaf's stored shape disagrees with the
+    target -- each error names the offending leaf path.
+    """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}", "state.npz")
-    data = np.load(path)
+    data = _open_npz(path)
     leaves_p, tdef = jax.tree_util.tree_flatten_with_path(target)
     flat_shard = (tdef.flatten_up_to(shardings) if shardings is not None
                   else [None] * len(leaves_p))
     out = []
     for (p, leaf), shd in zip(leaves_p, flat_shard):
-        arr = data[_path_key(p)]
-        assert arr.shape == tuple(leaf.shape), \
-            (_path_key(p), arr.shape, leaf.shape)
+        key = _path_key(p)
+        arr = _read_leaf(data, path, key)
+        if arr.shape != tuple(leaf.shape):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {key!r} has shape {arr.shape} "
+                f"but the restore target expects {tuple(leaf.shape)} -- "
+                "the checkpoint was written for a different model/plan "
+                "configuration")
         arr = jax.numpy.asarray(arr).astype(leaf.dtype)  # handles bf16 staging
         out.append(jax.device_put(arr, shd) if shd is not None else arr)
     return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def verify(ckpt_dir: str, step: Optional[int] = None,
+           target: Any = None) -> Dict[str, Any]:
+    """Round-trip integrity check of one checkpoint, without restoring.
+
+    Fully decompresses every stored leaf (catching truncation anywhere in
+    the archive, not just a bad central directory), parses meta.json, and
+    -- when ``target`` is given -- diffs the stored key set and shapes
+    against the target pytree.  Returns a summary dict; raises
+    ``CheckpointError`` on the first problem found.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "state.npz")
+    data = _open_npz(path)
+    n_bytes = 0
+    shapes: Dict[str, tuple] = {}
+    for key in data.files:
+        arr = _read_leaf(data, path, key)   # full decompress
+        shapes[key] = arr.shape
+        n_bytes += arr.nbytes
+    try:
+        meta = load_meta(ckpt_dir, step)
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        raise CheckpointError(
+            f"checkpoint step {step} in {ckpt_dir}: meta.json is missing "
+            f"or unparsable ({e})") from e
+    if meta.get("step") != step:
+        raise CheckpointError(
+            f"checkpoint {path}: meta.json records step {meta.get('step')} "
+            f"but the directory is step_{step:010d}")
+    report = dict(step=step, n_leaves=len(shapes), n_bytes=n_bytes,
+                  meta=meta, ok=True)
+    if target is not None:
+        want = {_path_key(p): tuple(leaf.shape) for p, leaf in
+                jax.tree_util.tree_flatten_with_path(target)[0]}
+        missing = sorted(set(want) - set(shapes))
+        extra = sorted(set(shapes) - set(want))
+        if missing or extra:
+            raise CheckpointError(
+                f"checkpoint {path}: pytree structure mismatch -- "
+                f"missing leaves {missing[:5]}{'...' if len(missing) > 5 else ''}, "
+                f"unexpected leaves {extra[:5]}{'...' if len(extra) > 5 else ''}")
+        for key, shape in want.items():
+            if shapes[key] != shape:
+                raise CheckpointError(
+                    f"checkpoint {path}: leaf {key!r} stored shape "
+                    f"{shapes[key]} != target shape {shape}")
+        report["target_leaves_matched"] = len(want)
+    return report
 
 
 def load_meta(ckpt_dir: str, step: Optional[int] = None) -> dict:

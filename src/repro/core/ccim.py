@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..obs import taps
+from ..resilience import faults as rfaults
 
 Array = jax.Array
 
@@ -595,6 +596,17 @@ def hybrid_mac_fast_gemm_prepacked(
     # Trace-time flag -- with no collector open (telemetry off) the
     # lowered program is unchanged
     tap_clip = taps.active()
+    # fault injection (resilience/faults.py): same static-flag contract.
+    # Drift perturbs only the ANALOG quantities -- the a_real partial
+    # before conversion and the SAR conversion itself -- never the exact
+    # DCIM adder, matching where the physics lives.  Terms are severity-
+    # scaled by the armed model's clock, which may be a traced loop
+    # counter: one executable covers the whole drift schedule.
+    fault_on = rfaults.active()
+    if fault_on:
+        f_gain, f_off, f_adc_off, f_scale = rfaults.epilogue_terms(
+            wf.shape[-1])
+        half_eff = jnp.maximum(1.0, jnp.floor(half * f_scale))
 
     def step(acc, inp, bmask=None):
         if noisy:
@@ -611,14 +623,23 @@ def hybrid_mac_fast_gemm_prepacked(
                 jnp.matmul(bxmc, bwmc) if n_j else 0.0)
             var = cfg.sigma_unit**2 * cfg.fast_noise_correction * a_mag
             a_real = a_real + jnp.sqrt(var + dyn_var) * bnoise
-        raw = jnp.floor(a_real / lsb + 0.5)
-        code = jnp.clip(raw, -half, half - 1)
+        if fault_on:
+            # capacitor-array drift: per-column gain/offset on the analog
+            # partial, then ADC conversion offset and clip escalation
+            a_real = a_real * f_gain + f_off * lsb
+            raw = jnp.floor(a_real / lsb + 0.5 + f_adc_off)
+            code = jnp.clip(raw, -half_eff, half_eff - 1)
+        else:
+            raw = jnp.floor(a_real / lsb + 0.5)
+            code = jnp.clip(raw, -half, half - 1)
         y8 = (dcim + code).astype(jnp.int32)
         if bmask is not None:
             y8 = y8 * bmask[:, None, None]
         clip = None
         if tap_clip:
-            over = ((raw < -half) | (raw > half - 1)).astype(jnp.int32)
+            lo, hi = (-half_eff, half_eff - 1) if fault_on else \
+                (-half, half - 1)
+            over = ((raw < lo) | (raw > hi)).astype(jnp.int32)
             if bmask is not None:
                 over = over * bmask[:, None, None]    # phantom chunks
             clip = jnp.sum(over)
@@ -724,7 +745,10 @@ def cim_matmul_int(
         raise ValueError(
             "per-segment noise streams (fused projection groups) are only "
             f"defined for the 'fast'/'exact' fidelities, got {fidelity!r}")
-    if fidelity == "fast" and noise_key is None and _kernel_numerics_match(cfg):
+    # an armed fault model (resilience/faults) lives in the XLA epilogue
+    # only -- the Pallas kernel models the nominal macro
+    if (fidelity == "fast" and noise_key is None
+            and _kernel_numerics_match(cfg) and not rfaults.active()):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         if use_pallas:

@@ -52,6 +52,7 @@ from .ccim import (
     smf_scale,
     split_sign_mag,
 )
+from ..resilience import faults as rfaults
 
 Array = jax.Array
 
@@ -312,8 +313,12 @@ def packed_cim_matmul_int(
             "Re-pack the weights for the serving config, or serve an "
             "all-analog subset (n_dcim_products=0, same n_mag_bits and "
             "acc_len), which never touches the folded planes.")
+    # the Pallas kernel implements the NOMINAL macro only: with a fault
+    # model armed (resilience/faults), the drifted conversion epilogue
+    # exists solely in the XLA fast path, so route there
     if (fidelity == "fast" and noise_key is None
-            and _prepacked_kernel_supported(cfg)):
+            and _prepacked_kernel_supported(cfg)
+            and not rfaults.active()):
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         if use_pallas:

@@ -92,6 +92,7 @@ from ..models.config import ModelConfig
 from ..obs import taps
 from ..obs import rings as obs_rings
 from ..obs.rings import ObsConfig, ObsSnapshot
+from ..resilience import faults as rfaults
 from .paging import PagedLayout, cdiv, contiguous_kv_bytes, plan_prefix_sharing
 
 
@@ -900,6 +901,67 @@ class ContinuousBatchingScheduler:
         """Pre-optimization StableHLO of the serve loop (fingerprint
         input for the zero-overhead-when-off gate, obs/fingerprint.py)."""
         return self._lower_loop(n_queue).as_text()
+
+    # -- segmented (guarded) serve loop --------------------------------
+
+    def _lower_segment(self, n_queue: int):
+        """Lower the BUDGET-BOUNDED serve loop the resilience driver runs
+        (resilience/failover.GuardedServer).
+
+        Identical to ``_lower_loop``'s body except for two things:
+
+        * the while condition also requires ``n_iter < budget``, and the
+          executable returns the FULL carry -- so the host can run the
+          workload as a sequence of device-resident segments, reading the
+          health counters (and possibly switching to a pack-compatible
+          sibling scheduler's executable) at each boundary.  Within a
+          segment the one-host-sync contract holds exactly as in ``run``;
+          the budget is the watchdog's sampling cadence.
+        * the body is traced under ``resilience.faults.clock(n_iter)``:
+          with a fault model armed at lower time, the injected drift's
+          severity schedule follows the DEVICE iteration counter, so one
+          executable covers the whole mid-stream drift scenario -- zero
+          retraces, zero recompiles as severity evolves.  With no model
+          armed the clock is a Python-level no-op and the segment body
+          lowers the exact ops of the plain loop (RES-OFF-PATH gates
+          this by fingerprint).
+
+        The telemetry rings stay INLINE in the carry (unlike
+        ``_lower_loop``'s separately-donated obs argument): the carry
+        round-trips through this executable every segment, so donation
+        of the whole carry aliases the rings anyway.
+        """
+        def seg_loop(params, carry, budget, q_toks, q_meta, q_pins):
+            def body(c):
+                with rfaults.clock(c["n_iter"]):
+                    return self._step_once(params, c, q_toks, q_meta,
+                                           q_pins, n_queue)[0]
+
+            def cond(c):
+                work = (jnp.any(self._occupied(c["st"]))
+                        | (c["q_head"] < n_queue))
+                return work & (c["n_iter"] < budget)
+
+            return jax.lax.while_loop(cond, body, carry)
+
+        carry = self._init_carry(n_queue, with_obs=True)
+        qt = _i32(np.zeros((n_queue, self._p_pad)))
+        qm = _i32(np.zeros((n_queue, _QM_COLS)))
+        qp = _i32(np.zeros((n_queue, self._n_pin_cols())))
+        return jax.jit(seg_loop, donate_argnums=(1,)).lower(
+            self._params, carry, _i32(0), qt, qm, qp)
+
+    def segment_hlo_text(self, n_queue: int) -> str:
+        """Pre-optimization StableHLO of the segmented loop (fingerprint
+        input for the fault-off-path gate in resilience tests/lint)."""
+        return self._lower_segment(n_queue).as_text()
+
+    def compile_segment(self, n_queue: int):
+        """Compile (and cache) the segmented loop for a queue length."""
+        key = ("seg", n_queue)
+        if key not in self._loops:
+            self._loops[key] = self._lower_segment(n_queue).compile()
+        return self._loops[key]
 
     def _build_loop(self, n_queue: int):
         """Compile the whole-workload loop for a queue of n_queue requests."""

@@ -582,6 +582,95 @@ def serve_continuous(arch: str, smoke: bool = True, slots: int = 2,
     return report.tokens_by_rid(), stats
 
 
+def serve_guarded(arch: str, smoke: bool = True, slots: int = 2,
+                  prompt_len: int = 16, n_requests: int = 8,
+                  stop_lengths=(4, 16, 8, 12), temperature: float = 0.0,
+                  seed: int = 0, plan=None, fuse: bool = True,
+                  draft_k: int = 0, paged: PagedLayout | None = None,
+                  prefill_chunk: int | None = None,
+                  prefix_sharing: bool = True, fault=None, watchdog=True,
+                  probe: bool = True, segment_iters: int = 8,
+                  start_rung: int | None = None):
+    """Watchdog-guarded continuous serving with plan-degradation failover.
+
+    The chaos-engineering driver: the workload runs through
+    ``resilience.failover.GuardedServer`` -- one pack-compatible
+    scheduler per ladder rung over ONE packed weight set, executed as
+    budget-bounded device-resident segments with health read at each
+    segment boundary (ADC clip rate, speculative acceptance, golden
+    probe).  ``fault`` (a ``resilience.faults.FaultModel``, or its
+    ``FaultModel.parse`` spec string like
+    ``"gain_amp=0.5,schedule=ramp,onset=8,period=32"``) arms
+    deterministic analog fault injection inside the compiled loop, so
+    detection and failover can be demonstrated end-to-end.  Fault-free
+    guarded serving emits tokens bit-identical to the plain scheduler
+    and lowers byte-identical StableHLO (tests/test_resilience.py).
+
+    Returns (tokens_by_rid, stats); ``stats["resilience"]`` carries the
+    ladder / watchdog log (``ResilienceLog.to_dict``).
+    """
+    from ..resilience.failover import GuardedServer, default_probe
+    from ..resilience.faults import FaultModel
+    from ..resilience.watchdog import Watchdog, WatchdogConfig
+
+    if isinstance(fault, str):
+        fault = FaultModel.parse(fault)
+    if watchdog is True:
+        watchdog = Watchdog()
+    elif isinstance(watchdog, WatchdogConfig):
+        watchdog = Watchdog(watchdog)
+    elif watchdog is False:
+        watchdog = None
+    cfg = get_config(arch, smoke=smoke)
+    if plan is not None:
+        cfg = dataclasses.replace(cfg, cim_plan=plan)
+    if not fuse:
+        cfg = dataclasses.replace(cfg, cim_fuse=False)
+    # resilience is a macro feature: the ladder degrades between analog /
+    # hybrid / digital executions of one packed weight set
+    cfg = dataclasses.replace(cfg, cim_mode=True)
+    params, _ = lm.init(jax.random.PRNGKey(seed), cfg)
+    t0 = time.time()
+    with span("serve.pack", arch=arch):
+        params = jax.block_until_ready(lm.pack_cim_params(params, cfg))
+    t_pack = time.time() - t0
+
+    gp = default_probe(params, fault=fault) if probe else None
+    server = GuardedServer(
+        params, cfg, slots=slots, prompt_len=prompt_len,
+        max_new_cap=max(stop_lengths), temperature=temperature, seed=seed,
+        draft_k=draft_k, paged=paged, prefill_chunk=prefill_chunk,
+        prefix_sharing=prefix_sharing, watchdog=watchdog, probe=gp,
+        fault=fault, segment_iters=segment_iters, start_rung=start_rung)
+    requests = mixed_length_requests(n_requests, prompt_len, cfg.vocab_size,
+                                     stop_lengths=stop_lengths, seed=seed)
+    t0 = time.time()
+    with span("serve.compile", arch=arch, n_queue=n_requests):
+        server.compile_for(n_requests)
+    t_compile = time.time() - t0
+    with span("serve.workload", arch=arch, n_requests=n_requests):
+        report, log = server.run(requests)
+
+    stats = dict(arch=arch, slots=slots, prompt_len=prompt_len,
+                 n_requests=n_requests, stop_lengths=list(stop_lengths),
+                 draft_k=draft_k, segment_iters=segment_iters,
+                 fault=None if fault is None else dataclasses.asdict(fault),
+                 pack_s=round(t_pack, 4), compile_s=round(t_compile, 4),
+                 n_compiles=server.n_compiles,
+                 continuous=report.summary(),
+                 resilience=log.to_dict())
+    state = watchdog.state if watchdog is not None else "(no watchdog)"
+    line = (f"[serve-guarded] {arch}: {n_requests} reqs over {slots} slots "
+            f"| {report.tok_s:.1f} tok/s | health {state}, serving rung "
+            f"'{log.rung_labels[log.final_rung]}'")
+    if log.actions:
+        line += f", {len(log.actions)} failover action(s)"
+    if fault is not None and log.detection_tokens is not None:
+        line += f" | fault detected at {log.detection_tokens} tokens"
+    print(line)
+    return report.tokens_by_rid(), stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, required=True)
@@ -620,6 +709,17 @@ def main():
     ap.add_argument("--no-prefix-sharing", dest="prefix_sharing",
                     action="store_false",
                     help="(--paged-blocks) disable shared-prefix reuse")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="guarded continuous serving: drift watchdog + "
+                         "plan-degradation failover ladder over one pack")
+    ap.add_argument("--inject-fault", type=str, default=None, metavar="SPEC",
+                    help="chaos: arm a deterministic analog FaultModel "
+                         "inside the compiled loop, e.g. 'gain_amp=0.5,"
+                         "schedule=ramp,onset=8,period=32' (see "
+                         "resilience.faults.FaultModel; implies --watchdog)")
+    ap.add_argument("--segment-iters", type=int, default=8,
+                    help="(--watchdog) scheduler iterations per guarded "
+                         "segment between health checks")
     ap.add_argument("--metrics", action="store_true",
                     help="device-resident telemetry rings + metrics registry")
     ap.add_argument("--metrics-out", type=str, default=None,
@@ -630,15 +730,24 @@ def main():
     metrics = args.metrics or bool(args.metrics_out)
     if args.trace_out:
         set_trace_path(args.trace_out)
-    if args.continuous:
-        paged = None
-        if args.paged_blocks:
-            from .paging import cdiv
-            max_seq = (args.prompt_len + 16
-                       + (args.draft_k if args.speculative else 0))
-            paged = PagedLayout(block_size=args.block_size,
-                                n_tbl=cdiv(max_seq, args.block_size),
-                                n_blocks=args.paged_blocks)
+    paged = None
+    if args.paged_blocks:
+        from .paging import cdiv
+        max_seq = (args.prompt_len + 16
+                   + (args.draft_k if args.speculative else 0))
+        paged = PagedLayout(block_size=args.block_size,
+                            n_tbl=cdiv(max_seq, args.block_size),
+                            n_blocks=args.paged_blocks)
+    if args.watchdog or args.inject_fault:
+        serve_guarded(args.arch, smoke=args.smoke, slots=args.batch,
+                      prompt_len=args.prompt_len, n_requests=args.requests,
+                      temperature=args.temperature,
+                      draft_k=args.draft_k if args.speculative else 0,
+                      paged=paged, prefill_chunk=args.prefill_chunk,
+                      prefix_sharing=args.prefix_sharing,
+                      fault=args.inject_fault,
+                      segment_iters=args.segment_iters)
+    elif args.continuous:
         serve_continuous(args.arch, smoke=args.smoke, slots=args.batch,
                          prompt_len=args.prompt_len,
                          n_requests=args.requests, cim=args.cim,

@@ -49,6 +49,8 @@ def _fmt_labels(items: LabelItems) -> str:
 
 
 def _fmt_value(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"                  # Prometheus text-format literal
     if math.isinf(v):
         return "+Inf" if v > 0 else "-Inf"
     f = float(v)

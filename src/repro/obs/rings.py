@@ -181,16 +181,18 @@ class ObsSnapshot:
                 "ttft_p95_s": it["ttft_p95_iters"] * self.iter_s_est}
 
     def to_dict(self) -> Dict:
+        # every possibly-undefined statistic follows one convention: NaN
+        # (zero-token / zero-iteration workloads) serializes as None, so
+        # the snapshot is always valid JSON (NaN is not)
+        opt = lambda v, nd: round(v, nd) if v == v else None
         d = dict(n_iter=self.n_iter, wall_s=round(self.wall_s, 4),
                  iter_s_est=self.iter_s_est, slots=self.slots,
                  counters=self.counters,
                  dropped_events=self.dropped_events,
                  recorded_iters=self.recorded_iters,
-                 occupancy_mean=round(self.occupancy_mean, 4),
-                 stall_factor_iters=round(self.stall_factor_iters, 4),
-                 acceptance_rate=(round(self.acceptance_rate, 4)
-                                  if self.acceptance_rate ==
-                                  self.acceptance_rate else None),
+                 occupancy_mean=opt(self.occupancy_mean, 4),
+                 stall_factor_iters=opt(self.stall_factor_iters, 4),
+                 acceptance_rate=opt(self.acceptance_rate, 4),
                  min_free_blocks=self.min_free_blocks,
                  spans=self.spans,
                  **{k: round(v, 2) if v == v else None
@@ -217,12 +219,17 @@ class ObsSnapshot:
         registry.counter(f"{prefix}_events_dropped_total",
                          "event-ring rows dropped after saturation").inc(
             self.dropped_events)
-        registry.gauge(f"{prefix}_occupancy",
-                       "mean live-slot fraction over sampled iterations"
-                       ).set(self.occupancy_mean)
-        registry.gauge(f"{prefix}_stall_factor_iters",
-                       "decode-timeline inflation by non-emitting "
-                       "iterations").set(self.stall_factor_iters)
+        # gauges that are undefined (NaN) for an empty workload -- zero
+        # recorded iterations or zero decode steps -- are skipped rather
+        # than published (a NaN gauge is noise to every scraper)
+        if self.occupancy_mean == self.occupancy_mean:
+            registry.gauge(f"{prefix}_occupancy",
+                           "mean live-slot fraction over sampled iterations"
+                           ).set(self.occupancy_mean)
+        if self.stall_factor_iters == self.stall_factor_iters:
+            registry.gauge(f"{prefix}_stall_factor_iters",
+                           "decode-timeline inflation by non-emitting "
+                           "iterations").set(self.stall_factor_iters)
         if self.min_free_blocks is not None:
             registry.gauge(f"{prefix}_free_blocks_min",
                            "paged free-list low-water mark").set(

@@ -1,0 +1,362 @@
+"""Graceful plan-degradation failover over one packed weight set.
+
+The pack-compatibility property (``core.engine.pack_compatible``) that
+powered plan-cascade speculative drafting also defines the RECOVERY
+space when the analog substrate degrades: from one hybrid
+``PackedCimWeights`` pack, three execution modes are servable with zero
+repacks and zero recompiles-at-failover-time --
+
+  analog    the all-analog shadow (``plan.derive_draft_plan``): cheapest
+            conversions, fully exposed to capacitor/ADC drift;
+  hybrid    the deployed mixed D/A plan: the paper's design point, with
+            ~half the product mass in exact counting logic;
+  digital   the entry-wise ``fidelity="exact"`` plan: every projection
+            reconstructs the integer weights (``packed.wq()``) and MACs
+            them exactly -- quantization is the only remaining error, so
+            it is immune to EVERY conversion-path fault (stuck-at cell
+            faults live in the shared array and survive, as in silicon).
+
+``derive_ladder`` orders these as a degradation ladder; escalation
+raises fidelity (and conversion cost), never lowers it.  In speculative
+mode the first escalation instead retargets the DRAFT: the all-analog
+draft plan -- the most drift-exposed component -- is swapped for
+self-speculation (draft == verify plan), which keeps the round shapes
+and ``draft_k`` constant so the loop carry still transfers, while
+removing the analog exposure that collapses acceptance.
+
+``GuardedServer`` drives the ladder: every rung gets its own
+pack-compatible scheduler over the SAME params, all segment executables
+are compiled UP FRONT (``n_compiles`` is the census the bench asserts
+zero-recompile-at-failover with), and the workload runs as budget-
+bounded device-resident segments (``scheduler._lower_segment``).  At
+each segment boundary -- the only host syncs -- the driver reads the
+obs counters, optionally runs the golden probe, feeds the watchdog, and
+on AMBER/RED switches which rung's executable the NEXT segment uses.
+The carry transfers across rungs unchanged: cache shapes, slot state
+and result buffers are plan-independent, so failover is literally "call
+a different precompiled function on the same state".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..launch.scheduler import (ContinuousBatchingScheduler, Request,
+                                ServeReport, _i32)
+from ..obs import rings as obs_rings
+from ..obs.rings import ObsConfig
+from ..plan.draft import derive_draft_plan
+from ..plan.plan import DeploymentPlan, PlanEntry
+from . import faults as rfaults
+from .watchdog import (GREEN, RED, GoldenProbe, Watchdog, WatchdogConfig,
+                       first_packed_leaf)
+
+
+def derive_exact_entry(entry: PlanEntry) -> PlanEntry:
+    """The exact-fidelity sibling of one plan entry: same CCIMConfig (so
+    ``packed.cfg == cfg`` and the pack guard passes -- zero repacks),
+    float entries untouched (they were never on the macro)."""
+    if entry.fidelity == "float":
+        return entry
+    return PlanEntry(cfg=entry.cfg, fidelity="exact", label="digital")
+
+
+def derive_exact_plan(plan: DeploymentPlan) -> DeploymentPlan:
+    """Entry-wise exact (all-digital) sibling of a deployment plan."""
+    return DeploymentPlan.from_dict(
+        {p: derive_exact_entry(e) for p, e in plan.entries},
+        default=derive_exact_entry(plan.default))
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One ladder position: a serve plan (plus, in speculative mode, the
+    draft plan) -- all rungs of one ladder serve the SAME pack."""
+    label: str
+    plan: DeploymentPlan
+    draft_plan: Optional[DeploymentPlan] = None
+
+
+def derive_ladder(plan: DeploymentPlan, *, speculative: bool = False
+                  ) -> Tuple[List[Rung], int]:
+    """The pack-compatible degradation ladder for a deployment plan.
+
+    Returns ``(rungs, start)`` -- rungs ordered cheapest to most exact,
+    ``start`` the deployed plan's own position (serving begins there;
+    rungs below it exist for per-rung cost measurement and are never
+    escalated INTO).  Non-speculative: analog -> hybrid -> digital.
+    Speculative: analog-draft -> self-draft (draft disabled by drafting
+    with the verify plan itself -- same shapes, same draft_k, so the
+    carry transfers) -> digital.
+    """
+    dig = derive_exact_plan(plan)
+    if speculative:
+        return [Rung("spec/analog-draft", plan, derive_draft_plan(plan)),
+                Rung("spec/self-draft", plan, plan),
+                Rung("digital", dig, dig)], 0
+    return [Rung("analog", derive_draft_plan(plan)),
+            Rung("hybrid", plan),
+            Rung("digital", dig)], 1
+
+
+@dataclasses.dataclass
+class FailoverAction:
+    """One ladder move, stamped with where in the workload it happened."""
+    n_iter: int
+    n_tokens: int
+    from_rung: int
+    to_rung: int
+    state: str
+    reasons: List[str]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ResilienceLog:
+    """What the guarded run did: ladder moves, watchdog windows, census."""
+    rung_labels: List[str]
+    start_rung: int
+    final_rung: int
+    actions: List[FailoverAction]
+    n_segments: int
+    segment_iters: int
+    n_compiles: int                   # all incurred BEFORE serving started
+    watchdog: Optional[Dict] = None   # Watchdog.to_dict()
+
+    @property
+    def detection_tokens(self) -> Optional[int]:
+        """Tokens emitted when the watchdog first left GREEN."""
+        if not self.watchdog:
+            return None
+        w = next((s for s in self.watchdog["windows"]
+                  if s["state"] != GREEN), None)
+        return None if w is None else w["n_tokens"]
+
+    def to_dict(self) -> Dict:
+        return dict(rung_labels=self.rung_labels, start_rung=self.start_rung,
+                    final_rung=self.final_rung,
+                    actions=[a.to_dict() for a in self.actions],
+                    n_segments=self.n_segments,
+                    segment_iters=self.segment_iters,
+                    n_compiles=self.n_compiles,
+                    detection_tokens=self.detection_tokens,
+                    watchdog=self.watchdog)
+
+
+class GuardedServer:
+    """Watchdog-guarded serving over a failover ladder of schedulers.
+
+    One instance owns one scheduler per rung (same params, same slot
+    geometry, pack-compatible plans) and drives the workload in budget-
+    bounded segments.  ``fault`` arms a ``FaultModel`` while the rung
+    executables are LOWERED, so injected drift follows the device
+    iteration clock inside each compiled segment; the digital rung's
+    exact path contains no conversion epilogue, so it is naturally
+    immune -- escalation genuinely restores fidelity rather than merely
+    re-measuring it.
+
+    All compiles happen in ``compile_for`` (or lazily on first ``run``);
+    ``n_compiles`` counts them, and no code path below ``run`` can add
+    more -- the zero-recompile-failover census the bench asserts.
+    """
+
+    def __init__(self, params, cfg, *, slots: int, prompt_len: int,
+                 max_new_cap: int, temperature: float = 0.0, seed: int = 0,
+                 pad_token: int = 0, draft_k: int = 0, paged=None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_sharing: bool = True,
+                 obs: Optional[ObsConfig] = None,
+                 ladder: Optional[List[Rung]] = None,
+                 start_rung: Optional[int] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 probe: Optional[GoldenProbe] = None,
+                 fault: Optional[rfaults.FaultModel] = None,
+                 segment_iters: int = 32):
+        if segment_iters < 1:
+            raise ValueError(f"segment_iters {segment_iters} < 1")
+        plan = cfg.cim_plan
+        if plan is None:
+            from ..core.ccim import DEFAULT_CONFIG
+            plan = DeploymentPlan.uniform(PlanEntry(
+                cfg=cfg.cim_cfg or DEFAULT_CONFIG,
+                fidelity=cfg.cim_fidelity))
+        if ladder is None:
+            ladder, default_start = derive_ladder(
+                plan, speculative=draft_k > 0)
+        else:
+            default_start = 0
+        self.ladder = ladder
+        self.start_rung = (start_rung if start_rung is not None
+                           else default_start)
+        if not (0 <= self.start_rung < len(ladder)):
+            raise ValueError(f"start_rung {self.start_rung} outside ladder "
+                             f"of {len(ladder)}")
+        self.obs = obs if obs is not None else ObsConfig()
+        self.watchdog = watchdog
+        self.probe = probe
+        self.fault = fault
+        self.segment_iters = segment_iters
+        self._params = params
+        self.n_compiles = 0
+        self._exes: Dict[Tuple[int, int], object] = {}
+        self._scheds: List[ContinuousBatchingScheduler] = []
+        for rung in ladder:
+            rcfg = dataclasses.replace(cfg, cim_plan=rung.plan)
+            self._scheds.append(ContinuousBatchingScheduler(
+                params, rcfg, slots, prompt_len, max_new_cap,
+                temperature=temperature, seed=seed, pad_token=pad_token,
+                draft_k=draft_k, draft_plan=rung.draft_plan, paged=paged,
+                prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+                obs=self.obs))
+
+    def scheduler(self, rung: Optional[int] = None
+                  ) -> ContinuousBatchingScheduler:
+        return self._scheds[self.start_rung if rung is None else rung]
+
+    def _armed(self):
+        return (rfaults.inject(self.fault) if self.fault is not None
+                else contextlib.nullcontext())
+
+    def compile_for(self, n_requests: int):
+        """Precompile EVERY rung's segment executable for a queue length
+        -- failover later is a dictionary lookup, never a compile.  The
+        fault model (if any) is armed around lowering, baking the drift
+        schedule against the device clock into each executable."""
+        with self._armed():
+            for i in range(len(self.ladder)):
+                if (i, n_requests) not in self._exes:
+                    self._exes[(i, n_requests)] = (
+                        self._scheds[i].compile_segment(n_requests))
+                    self.n_compiles += 1
+
+    def run(self, requests: Sequence[Request],
+            arrival_iters: Optional[Sequence[int]] = None
+            ) -> Tuple[ServeReport, ResilienceLog]:
+        """Serve to completion under the watchdog.  Returns the familiar
+        ``ServeReport`` (token-identical to the start rung's plain
+        ``run`` while the watchdog stays GREEN) plus the resilience log.
+        """
+        n = len(requests)
+        self.compile_for(n)
+        compiles_at_start = self.n_compiles
+        sched0 = self._scheds[self.start_rung]
+        sched0._check(requests)
+        q_toks, q_meta, q_pins = sched0._stage(requests, arrival_iters)
+        carry = jax.block_until_ready(
+            sched0._init_carry(n, with_obs=True))
+        rung = self.start_rung
+        worst = 0                      # monotone: sticky degradation
+        actions: List[FailoverAction] = []
+        prev = dict(tokens=0, clip=0, drafted=0, accepted=0)
+        n_segments = 0
+        budget = 0
+        t0 = time.time()
+        while True:
+            budget += self.segment_iters
+            carry = self._exes[(rung, n)](
+                self._params, carry, _i32(budget), q_toks, q_meta, q_pins)
+            n_segments += 1
+            # ONE host sync per segment: the scalar health leaves (plus
+            # occupancy masks for the done test)
+            st = carry["st"]
+            occ = st["live"] | st["pending"]
+            if "filling" in st:
+                occ = occ | st["filling"]
+            h = jax.device_get(dict(
+                n_iter=carry["n_iter"], q_head=carry["q_head"],
+                occupied=occ.any(), ctr=carry["obs"]["ctr"],
+                n_drafted=carry["n_drafted"],
+                n_accepted=carry["n_accepted"]))
+            n_iter = int(h["n_iter"])
+            ctr = np.asarray(h["ctr"])
+            tokens = int(ctr[obs_rings.CTR_TOKENS])
+            clip = int(ctr[obs_rings.CTR_ADC_CLIP])
+            drafted, accepted = int(h["n_drafted"]), int(h["n_accepted"])
+            done = (not bool(h["occupied"])) and int(h["q_head"]) >= n
+
+            if self.watchdog is not None:
+                tok_d = tokens - prev["tokens"]
+                clip_d = clip - prev["clip"]
+                dr_d = drafted - prev["drafted"]
+                ac_d = accepted - prev["accepted"]
+                prev = dict(tokens=tokens, clip=clip, drafted=drafted,
+                            accepted=accepted)
+                probe_ratio = None
+                if (self.probe is not None and (n_segments - 1)
+                        % self.watchdog.cfg.probe_every == 0):
+                    probe_ratio = self.probe(t=n_iter)
+                state = self.watchdog.observe(
+                    n_tokens=tokens, n_iter=n_iter,
+                    clip_rate=(clip_d / tok_d if tok_d > 0 else None),
+                    accept_rate=(ac_d / dr_d if dr_d > 0 else None),
+                    probe_ratio=probe_ratio)
+                level = 2 if state == RED else (0 if state == GREEN else 1)
+                if level > worst:
+                    worst = level
+                    last = len(self.ladder) - 1
+                    target = last if worst >= 2 else min(rung + 1, last)
+                    if target != rung:
+                        actions.append(FailoverAction(
+                            n_iter=n_iter, n_tokens=tokens, from_rung=rung,
+                            to_rung=target, state=state,
+                            reasons=list(self.watchdog.history[-1].reasons)))
+                        rung = target
+            if done:
+                break
+        wall = time.time() - t0
+
+        res_out = np.asarray(carry["res_out"])
+        res_n = np.asarray(carry["res_n"])
+        res_iter = np.asarray(carry["res_iter"])
+        res_first = np.asarray(carry["res_first"])
+        n_iter = int(carry["n_iter"])
+        from ..launch.scheduler import FinishedRequest
+        done_reqs = [FinishedRequest(
+            rid=r.rid, tokens=res_out[i, :res_n[i]].copy(),
+            latency_s=wall * int(res_iter[i]) / max(n_iter, 1),
+            finish_iter=int(res_iter[i]), first_iter=int(res_first[i]))
+            for i, r in enumerate(requests)]
+        report = ServeReport(
+            finished=done_reqs, wall_s=wall, n_steps=int(carry["n_steps"]),
+            n_admits=int(carry["n_admits"]), slots=sched0.slots,
+            n_drafted=int(carry["n_drafted"]),
+            n_accepted=int(carry["n_accepted"]),
+            n_pf=int(np.asarray(carry["n_pf"])) if "n_pf" in carry else 0,
+            peak_blocks=(int(np.asarray(carry["peak_blocks"]))
+                         if "peak_blocks" in carry else 0))
+        report.obs = obs_rings.harvest_obs(
+            self.obs, jax.device_get(carry["obs"]), n_iter=n_iter,
+            wall_s=wall, slots=sched0.slots, n_steps=report.n_steps,
+            n_drafted=report.n_drafted, n_accepted=report.n_accepted,
+            paged=sched0.paged is not None)
+        assert self.n_compiles == compiles_at_start, (
+            "guarded serve compiled mid-run")   # the census invariant
+        log = ResilienceLog(
+            rung_labels=[r.label for r in self.ladder],
+            start_rung=self.start_rung, final_rung=rung, actions=actions,
+            n_segments=n_segments, segment_iters=self.segment_iters,
+            n_compiles=self.n_compiles,
+            watchdog=(self.watchdog.to_dict() if self.watchdog is not None
+                      else None))
+        return report, log
+
+
+def default_probe(params, *, fault=None, serve_params=None,
+                  m: int = 4, seed: int = 0) -> Optional[GoldenProbe]:
+    """Golden probe over the first packed projection of ``params`` (the
+    deployment-time reference); ``serve_params`` (e.g. a stuck-at-faulted
+    pack) supplies the leaf actually probed.  None when the tree holds no
+    packed weights (float serving has no analog substrate to watch)."""
+    ref = first_packed_leaf(params)
+    if ref is None:
+        return None
+    serve = (first_packed_leaf(serve_params)
+             if serve_params is not None else None)
+    return GoldenProbe(ref, fault=fault, serve_packed=serve, m=m, seed=seed)

@@ -72,3 +72,78 @@ def test_restore_reshard_to_mesh(tmp_path):
     r = ckpt.restore(d, t, shardings=sh)
     np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
     assert r["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# corrupt-checkpoint hardening: every failure mode surfaces as a
+# CheckpointError naming the problem, never a bare KeyError/zlib error
+# ---------------------------------------------------------------------------
+
+
+def _npz_path(d, step=0):
+    return os.path.join(d, f"step_{step:010d}", "state.npz")
+
+
+def test_restore_truncated_archive_raises_checkpoint_error(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 0, _tree())
+    p = _npz_path(d)
+    with open(p, "rb") as f:
+        data = f.read()
+    with open(p, "wb") as f:
+        f.write(data[: len(data) // 2])      # short write / torn disk
+    with pytest.raises(ckpt.CheckpointError, match="truncated|corrupt"):
+        ckpt.restore(d, _tree())
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.verify(d)
+
+
+def test_restore_missing_leaf_names_it(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    ckpt.save(d, 0, t)
+    bigger = dict(t, extra=jnp.zeros((2,), jnp.float32))
+    with pytest.raises(ckpt.CheckpointError, match="extra"):
+        ckpt.restore(d, bigger)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 0, _tree())
+    wrong = dict(_tree(), a=jnp.zeros((3, 3), jnp.float32))
+    with pytest.raises(ckpt.CheckpointError, match="a.*shape|shape.*a"):
+        ckpt.restore(d, wrong)
+
+
+def test_verify_roundtrip_and_target_diff(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    ckpt.save(d, 2, t, meta={"arch": "x"})
+    rep = ckpt.verify(d, target=t)
+    assert rep["ok"] and rep["step"] == 2
+    assert rep["target_leaves_matched"] == len(jax.tree.leaves(t))
+    with pytest.raises(ckpt.CheckpointError, match="mismatch"):
+        ckpt.verify(d, target=dict(t, extra=jnp.zeros((1,))))
+
+
+def test_verify_bad_meta_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 0, _tree())
+    with open(os.path.join(d, "step_0000000000", "meta.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ckpt.CheckpointError, match="meta"):
+        ckpt.verify(d)
+
+
+def test_verify_cli_exit_codes(tmp_path):
+    from repro.checkpoint.__main__ import main
+    d = str(tmp_path / "ck")
+    assert main([d, "--verify"]) == 2            # nothing there
+    ckpt.save(d, 0, _tree())
+    assert main([d, "--verify"]) == 0            # intact
+    p = _npz_path(d)
+    with open(p, "rb") as f:
+        data = f.read()
+    with open(p, "wb") as f:
+        f.write(data[: len(data) // 2])
+    assert main([d, "--verify"]) == 1            # corrupt

@@ -213,3 +213,51 @@ def test_prometheus_exposition_parses(packed_cim):
     js = reg.snapshot()
     assert js["serve_tokens_total"][0]["value"] == snap.counters["tokens"]
     assert js["serve_ttft_seconds"][0]["count"] == len(snap.ttft_iters)
+
+
+# ---------------------------------------------------------------------------
+# 7. degenerate rings: empty workloads and fully-dropped event rings
+# ---------------------------------------------------------------------------
+
+
+def test_harvest_empty_workload_is_nan_safe():
+    """Zero iterations, zero tokens: every derived statistic must come
+    back NaN (never a ZeroDivisionError or an empty-percentile crash),
+    serialize as None, and publish no NaN gauges."""
+    cfg = ObsConfig()
+    snap = R.harvest_obs(cfg, jax.device_get(R.init_obs_state(cfg)),
+                         n_iter=0, wall_s=0.0, slots=2, n_steps=0)
+    assert snap.counters["tokens"] == 0 and snap.ttft_iters == {}
+    p = snap.ttft_percentiles_iters()
+    assert p["ttft_p50_iters"] != p["ttft_p50_iters"]      # NaN, no crash
+    d = snap.to_dict()
+    json.dumps(d)                                          # NaN-free JSON
+    assert d["ttft_p50_iters"] is None and d["ttft_p95_s"] is None
+    assert d["occupancy_mean"] is None
+    reg = MetricsRegistry()
+    snap.register(reg)
+    text = reg.export_prometheus()
+    assert "serve_occupancy" not in text                   # NaN gauge skipped
+    assert "serve_stall_factor_iters" not in text
+    assert reg.histogram("serve_ttft_seconds").count == 0
+
+
+def test_harvest_fully_dropped_event_ring():
+    """A saturated event ring that lost every first-token row: spans are
+    partial, TTFT is empty, percentiles are NaN -- and the snapshot
+    still serializes and registers cleanly."""
+    cfg = ObsConfig(event_cap=2)
+    obs = R.init_obs_state(cfg)
+    for rid in range(4):                  # 4 admits into a 2-row ring
+        obs = R.ring_push(obs, R.EV_ADMIT, rid, rid)
+    snap = R.harvest_obs(cfg, jax.device_get(obs), n_iter=4, wall_s=0.1,
+                         slots=2, n_steps=4)
+    assert snap.dropped_events == 2
+    assert snap.ttft_iters == {}
+    assert all(s["first_iter"] is None for s in snap.spans)
+    d = snap.to_dict()
+    json.dumps(d)
+    assert d["ttft_p95_iters"] is None
+    reg = MetricsRegistry()
+    snap.register(reg)
+    assert "NaN" not in reg.export_prometheus()
